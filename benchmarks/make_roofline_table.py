@@ -1,0 +1,84 @@
+"""Render the EXPERIMENTS.md roofline + dry-run tables from the artifacts
+in experiments/dryrun/.
+
+  PYTHONPATH=src python -m benchmarks.make_roofline_table [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load(mesh: str):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(BASE, f"*_{mesh}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}GiB"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+
+    print("## Dry-run matrix (status; 256-chip single pod / 512-chip "
+          "multi-pod)\n")
+    singles = {(r["arch"], r["shape"]): r for r in load("single")}
+    multis = {(r["arch"], r["shape"]): r for r in load("multi")}
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    archs = sorted({a for a, _ in singles})
+    print("| arch | " + " | ".join(shapes) + " |")
+    print("|---|" + "---|" * len(shapes))
+    for a in archs:
+        cells = []
+        for s in shapes:
+            r1 = singles.get((a, s), {})
+            r2 = multis.get((a, s), {})
+            st1 = r1.get("status", "?")
+            st2 = r2.get("status", "?")
+            mark = {"ok": "ok", "skip": "skip", "fail": "FAIL"}.get(st1, "?")
+            mark2 = {"ok": "ok", "skip": "skip", "fail": "FAIL"}.get(st2, "?")
+            cells.append(f"{mark}/{mark2}")
+        print(f"| {a} | " + " | ".join(cells) + " |")
+
+    print("\n## Roofline table (single pod, 256 chips; seconds per step)\n")
+    print("| arch | shape | t_compute | t_memory | t_coll | bottleneck | "
+          "useful_flops | peak_mem/dev | fits | collectives |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            r = singles.get((a, s))
+            if not r or r.get("status") != "ok":
+                continue
+            cc = r.get("coll_counts", {})
+            ccs = " ".join(f"{k.replace('all-', 'a')}:{v}"
+                           for k, v in sorted(cc.items()))
+            var = f" ({r['variant']})" if r.get("variant") else ""
+            print(f"| {a} | {s}{var} | {r['t_compute']:.3g} "
+                  f"| {r['t_memory']:.3g} | {r['t_collective']:.3g} "
+                  f"| **{r['bottleneck']}** "
+                  f"| {r['useful_flops_ratio']:.2f} "
+                  f"| {fmt_bytes(r['peak_bytes_per_device'])} "
+                  f"| {'Y' if r['fits_hbm'] else 'N'} | {ccs} |")
+
+    print("\n## Skips\n")
+    for a in archs:
+        for s in shapes:
+            r = singles.get((a, s))
+            if r and r.get("status") == "skip":
+                print(f"* {a} x {s}: {r['reason']}")
+            if r and r.get("status") == "fail":
+                print(f"* FAIL {a} x {s}: {r.get('error', '')[:160]}")
+
+
+if __name__ == "__main__":
+    main()

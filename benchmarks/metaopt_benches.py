@@ -1,0 +1,206 @@
+"""Benchmarks reproducing the paper's tables/figures on the simulator and
+(reduced-scale) real executor. One function per artifact; each returns a
+list of CSV rows (name, value, derived)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.completion import (expected_alpha, hyperband_alpha,
+                                   min_alpha, paper_brackets,
+                                   solve_r_for_alpha)
+from repro.core.search_space import paper_rl_space
+from repro.core.simulator import (GA3CWorkload, ToyWorkload, simulate_grid,
+                                  simulate_hyperband, simulate_hypertrick,
+                                  simulate_successive_halving)
+
+GAME_PARAMS = {  # paper Table 1: (Np, r, episodes/phase) + workload optimum
+    "boxing": dict(np_=10, r=0.25, lr=3e-4, gamma=0.95, t_opt=12,
+                   plateau=100),
+    "centipede": dict(np_=10, r=0.25, lr=1e-3, gamma=0.9995, t_opt=40,
+                      plateau=9000),
+    "pacman": dict(np_=10, r=0.25, lr=2e-4, gamma=0.95, t_opt=60,
+                   plateau=2200),
+    "pong": dict(np_=5, r=0.25, lr=6e-4, gamma=0.995, t_opt=8, plateau=21),
+}
+
+
+def _workload(game, seed):
+    p = GAME_PARAMS[game]
+    return GA3CWorkload(seed=seed, lr_opt=p["lr"], gamma_opt=p["gamma"],
+                        t_opt=p["t_opt"], plateau=p["plateau"])
+
+
+# ---------------------------------------------------------------------------
+def bench_toy_problem():
+    """Figs. 2/3/8/9: HyperTrick vs SH (dynamic/static) vs Grid on the toy
+    problem (16 workers, 6 nodes, Np=4, r=25%), mean over 30 seeds."""
+    rows = []
+    agg = {k: ([], []) for k in ("hypertrick", "sh_dynamic", "sh_static",
+                                 "grid")}
+    for seed in range(30):
+        cfgs = [{"id": i} for i in range(16)]
+        wl = lambda: ToyWorkload(seed, cost_spread=0.6)
+        rs = [simulate_hypertrick(wl(), cfgs, 6, 4, 0.25, seed=seed),
+              simulate_successive_halving(wl(), cfgs, 6, 4, 0.25, seed=seed),
+              simulate_successive_halving(wl(), cfgs, 6, 4, 0.25, seed=seed,
+                                          static=True),
+              simulate_grid(wl(), cfgs, 6, 4, seed=seed)]
+        for r in rs:
+            agg[r.name][0].append(r.makespan)
+            agg[r.name][1].append(r.occupancy)
+    for name, (mk, oc) in agg.items():
+        rows.append((f"toy/{name}/makespan", np.mean(mk),
+                     f"occ={np.mean(oc):.3f}"))
+    rows.append(("toy/grid_over_hypertrick",
+                 np.mean(agg["grid"][0]) / np.mean(agg["hypertrick"][0]),
+                 "paper: 15.6/10 = 1.56"))
+    return rows
+
+
+def bench_completion_rate():
+    """Table 1: measured alpha vs min/E[alpha] per game, at the paper's
+    population scale (100 workers) on the simulator."""
+    rows = []
+    space = paper_rl_space()
+    for game, p in GAME_PARAMS.items():
+        alphas = []
+        for seed in range(5):
+            cfgs = space.sample_n(100, seed=seed)
+            res = simulate_hypertrick(_workload(game, seed), cfgs,
+                                      n_nodes=50, n_phases=p["np_"],
+                                      eviction_rate=p["r"], seed=seed)
+            alphas.append(res.completion_rate)
+        rows.append((f"table1/{game}/alpha", np.mean(alphas),
+                     f"min={min_alpha(p['r'], p['np_']):.4f} "
+                     f"E={expected_alpha(p['r'], p['np_']):.4f}"))
+    return rows
+
+
+def bench_hyperband_brackets():
+    """Table 2: bracket structure and completion rates."""
+    rows = []
+    bs = paper_brackets()
+    for b in bs:
+        rows.append((f"table2/bracket_s{b.s}/alpha", b.alpha,
+                     f"n={b.n} r={b.r}"))
+    total = hyperband_alpha(bs)
+    rows.append(("table2/hyperband_alpha", total, "paper: 0.3261"))
+    rows.append(("table2/solved_r_np27", solve_r_for_alpha(total, 27),
+                 "paper: 0.1082"))
+    return rows
+
+
+def bench_ht_vs_hyperband():
+    """Table 3 / Fig. 6: HyperTrick vs Hyperband, same 46 configurations,
+    hyperparameter-dependent costs, mean over 10 seeds."""
+    rows = []
+    brackets = paper_brackets()
+    r = solve_r_for_alpha(hyperband_alpha(brackets), 27)
+    space = paper_rl_space()
+    for game in ("pong", "boxing"):
+        acc = {"ht": [], "hb": []}
+        occ = {"ht": [], "hb": []}
+        ttb = {"ht": [], "hb": []}
+        best = {"ht": [], "hb": []}
+        for seed in range(10):
+            cfgs = space.sample_n(46, seed=seed)
+            wl = _workload(game, seed)
+            hb = simulate_hyperband(wl, cfgs, brackets, 46, seed=seed)
+            ht = simulate_hypertrick(wl, cfgs, 46, 27, r, seed=seed)
+            for k, res in (("ht", ht), ("hb", hb)):
+                acc[k].append(res.makespan)
+                occ[k].append(res.occupancy)
+                ttb[k].append(res.time_to_best)
+                best[k].append(res.best_metric)
+        for k, label in (("ht", "hypertrick"), ("hb", "hyperband")):
+            rows.append((
+                f"table3/{game}/{label}/makespan", np.mean(acc[k]),
+                f"occ={np.mean(occ[k]):.3f} ttb={np.mean(ttb[k]):.1f} "
+                f"best={np.mean(best[k]):.1f}"))
+    return rows
+
+
+def bench_hparam_importance():
+    """Table 4: random-forest importances of (lr, gamma, t_max) for the
+    final score, fit on the knowledge-DB contents of a simulated run."""
+    from benchmarks.rf import RandomForestRegressor
+    rows = []
+    space = paper_rl_space()
+    for game in GAME_PARAMS:
+        xs, ys = [], []
+        for seed in range(4):
+            cfgs = space.sample_n(100, seed=100 + seed)
+            res = simulate_hypertrick(_workload(game, seed), cfgs, 50, 10,
+                                      0.25, seed=seed)
+            last = {}
+            for e in res.timeline:
+                last[e.worker] = e.metric
+            for wid, metric in last.items():
+                hp = cfgs[wid]
+                xs.append([np.log10(hp["learning_rate"]),
+                           np.log10(1 - hp["gamma"]),
+                           np.log(hp["t_max"])])
+                ys.append(metric)
+        rf = RandomForestRegressor(n_trees=40, seed=0).fit(
+            np.array(xs), np.array(ys))
+        imp = rf.importances_
+        rows.append((f"table4/{game}/importance_lr", imp[0],
+                     f"gamma={imp[1]:.2f} t_max={imp[2]:.2f}"))
+    return rows
+
+
+def bench_metaopt_rl_real():
+    """Reduced-scale REAL metaoptimization: HyperTrick tunes GA3C on the
+    boxing analogue through the thread executor (actual JAX training)."""
+    from repro.core.executor import ThreadCluster
+    from repro.core.hypertrick import HyperTrick
+    from repro.rl.ga3c import make_rl_objective
+    rows = []
+    t0 = time.time()
+    objective = make_rl_objective("boxing", episodes_per_phase=16,
+                                  n_envs=8, max_updates=300)
+    policy = HyperTrick(paper_rl_space(), w0=6, n_phases=3,
+                        eviction_rate=0.25, seed=0)
+    res = ThreadCluster(2, objective).run(policy)
+    s = res.summary()
+    rows.append(("real_rl/best_score", s["best_metric"],
+                 f"alpha={s['alpha']} wall={time.time()-t0:.0f}s "
+                 f"killed={s['by_status'].get('killed', 0)}"))
+    return rows
+
+
+def bench_beyond_paper_policies():
+    """Beyond-paper: HyperTrick vs ASHA (Li 2018) vs evolutionary
+    HyperTrick (the paper's §6 proposal) on the real thread executor with
+    a synthetic cost-heterogeneous objective."""
+    import numpy as np
+    from repro.core.asha import ASHA
+    from repro.core.evolution import EvolutionaryHyperTrick
+    from repro.core.executor import ThreadCluster
+    from repro.core.hypertrick import HyperTrick
+    from repro.core.search_space import LogUniform, SearchSpace
+
+    space = SearchSpace({"lr": LogUniform(1e-5, 1e-1)})
+
+    def objective(hp, phase, state):
+        q = -abs(np.log10(hp["lr"]) - np.log10(1e-3))
+        return q * (1 + 0.15 * phase), state
+
+    rows = []
+    for name, mk in (
+        ("hypertrick", lambda s: HyperTrick(space, 24, 6, 0.25, seed=s)),
+        ("asha", lambda s: ASHA(space, 24, 6, eta=3, seed=s)),
+        ("ht_evolution", lambda s: EvolutionaryHyperTrick(
+            space, 24, 6, 0.25, seed=s)),
+    ):
+        bests, alphas = [], []
+        for seed in range(5):
+            res = ThreadCluster(4, objective).run(mk(seed))
+            summ = res.summary()
+            bests.append(abs(np.log10(summ["best_hparams"]["lr"]) + 3))
+            alphas.append(summ["alpha"])
+        rows.append((f"beyond/{name}/dist_to_optimum", float(np.mean(bests)),
+                     f"alpha={np.mean(alphas):.3f}"))
+    return rows

@@ -1,0 +1,126 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf lab: compile a (arch, shape) variant and print the roofline terms +
+the top collective ops by bytes — the 'profile' for the hypothesis ->
+change -> measure -> validate loop (no real TPU; the lowered HLO is the
+profile, per the dry-run methodology).
+
+  PYTHONPATH=src python -m benchmarks.perf_lab --arch yi-9b --shape train_4k \\
+      [--remat full|dots|none] [--optimizer adamw|rmsprop] [--zero-opt]
+      [--moe-impl psum|a2a] [--dtype bfloat16|float32] [--top 10]
+"""
+import argparse
+import dataclasses
+import json
+import re
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config
+from repro.launch.dryrun import _compile_step, _costs
+from repro.launch.mesh import make_production_mesh
+from repro.models import flags as mflags
+from repro.roofline import analysis as ra, hw
+
+_LINE = re.compile(r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                   r"collective-permute)")
+
+
+def top_collectives(txt: str, n: int = 10):
+    rows = []
+    for line in txt.splitlines():
+        m = ra._COLL_RE.search(line)
+        if not m or "-done" in line.split("(")[0]:
+            continue
+        op = m.group("op")
+        b = ra._shape_bytes(m.group("shapes"))
+        g = ra._group_size(line)
+        rows.append((b * ra._factor(op, g), op, g,
+                     m.group("shapes")[:60]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--zero-opt", action="store_true")
+    ap.add_argument("--moe-impl", default=None)
+    ap.add_argument("--dtype", default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--norm-bf16", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--top", type=int, default=10)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    over = {}
+    if args.moe_impl:
+        over["moe_impl"] = args.moe_impl
+    if args.dtype:
+        over["dtype"] = args.dtype
+    if args.capacity_factor:
+        over["capacity_factor"] = args.capacity_factor
+    if args.norm_bf16:
+        over["norm_f32"] = False
+    if args.seq_parallel:
+        over["seq_parallel"] = True
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    shape = INPUT_SHAPES[args.shape]
+    mesh = make_production_mesh()
+    ms = mesh.shape["model"]
+
+    # full-depth compile (memory) + shallow cost extrapolation
+    compiled = _compile_step(cfg, shape, mesh, ms, args.optimizer,
+                             args.remat, args.zero_opt, unroll=False)
+    ma = compiled.memory_analysis()
+    peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+
+    mflags.UNROLL_INNER[0] = True
+    plen = len(cfg.pattern)
+    c1 = dataclasses.replace(cfg, n_layers=plen)
+    c2 = dataclasses.replace(cfg, n_layers=2 * plen)
+    if cfg.is_encdec:
+        c1 = dataclasses.replace(c1, n_enc_layers=1)
+        c2 = dataclasses.replace(c2, n_enc_layers=1)
+    comp1 = _compile_step(c1, shape, mesh, ms, args.optimizer, args.remat,
+                          args.zero_opt, unroll=True)
+    f1, b1, cb1, _ = _costs(comp1)
+    f2, b2, cb2, _ = _costs(_compile_step(c2, shape, mesh, ms,
+                                          args.optimizer, args.remat,
+                                          args.zero_opt, unroll=True))
+    mflags.UNROLL_INNER[0] = False
+    R = cfg.n_repeat
+    fl = f1 + (f2 - f1) * (R - 1)
+    by = b1 + (b2 - b1) * (R - 1)
+    cb = cb1 + (cb2 - cb1) * (R - 1)
+    cfx, cbx = ra.sequential_scan_correction(cfg, shape, mesh)
+    fl += cfx
+    by += cbx
+    fl += ra.moe_gmm_correction(cfg, shape, mesh)
+
+    result = {
+        "tag": args.tag or f"{args.arch}/{args.shape}",
+        "variant": {k: v for k, v in vars(args).items()
+                    if k in ("remat", "optimizer", "zero_opt", "moe_impl",
+                             "dtype", "capacity_factor", "norm_bf16",
+                             "seq_parallel") and v},
+        "t_compute": fl / hw.PEAK_FLOPS_BF16,
+        "t_memory": by / hw.HBM_BW,
+        "t_collective": cb / hw.ICI_BW,
+        "peak_gib": peak / 2**30,
+    }
+    print(json.dumps(result, indent=1))
+    print("\ntop collectives in ONE superblock-depth module "
+          "(multiply by ~n_repeat):")
+    for bts, op, g, shp in top_collectives(comp1.as_text(), args.top):
+        print(f"  {bts/2**20:9.1f} MiB  {op:20s} group={g:3d}  {shp}")
+
+
+if __name__ == "__main__":
+    main()

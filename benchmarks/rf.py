@@ -1,0 +1,83 @@
+"""Minimal random-forest regressor (numpy) for the paper's Table 4
+hyperparameter-importance analysis (scikit-learn is not available offline).
+Extra-trees style: random thresholds, best-of-k split by MSE reduction;
+feature importances = accumulated variance reduction per feature.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Node:
+    __slots__ = ("feat", "thr", "left", "right", "value")
+
+    def __init__(self):
+        self.feat = -1
+        self.thr = 0.0
+        self.left = None
+        self.right = None
+        self.value = 0.0
+
+
+class RandomForestRegressor:
+    def __init__(self, n_trees: int = 50, max_depth: int = 6,
+                 min_leaf: int = 4, n_thresholds: int = 8, seed: int = 0):
+        self.n_trees = n_trees
+        self.max_depth = max_depth
+        self.min_leaf = min_leaf
+        self.n_thresholds = n_thresholds
+        self.seed = seed
+        self.trees: list = []
+        self.importances_: np.ndarray | None = None
+
+    def _build(self, x, y, depth, rng, imp):
+        node = _Node()
+        node.value = float(y.mean())
+        if depth >= self.max_depth or len(y) < 2 * self.min_leaf \
+                or y.var() < 1e-12:
+            return node
+        best = (0.0, None)
+        n, d = x.shape
+        parent_var = y.var() * n
+        for feat in range(d):
+            lo, hi = x[:, feat].min(), x[:, feat].max()
+            if hi <= lo:
+                continue
+            for thr in rng.uniform(lo, hi, self.n_thresholds):
+                m = x[:, feat] <= thr
+                nl = int(m.sum())
+                if nl < self.min_leaf or n - nl < self.min_leaf:
+                    continue
+                gain = parent_var - (y[m].var() * nl
+                                     + y[~m].var() * (n - nl))
+                if gain > best[0]:
+                    best = (gain, (feat, thr, m))
+        if best[1] is None:
+            return node
+        gain, (feat, thr, m) = best
+        imp[feat] += gain
+        node.feat, node.thr = feat, float(thr)
+        node.left = self._build(x[m], y[m], depth + 1, rng, imp)
+        node.right = self._build(x[~m], y[~m], depth + 1, rng, imp)
+        return node
+
+    def fit(self, x: np.ndarray, y: np.ndarray):
+        rng = np.random.default_rng(self.seed)
+        imp = np.zeros(x.shape[1])
+        self.trees = []
+        for _ in range(self.n_trees):
+            idx = rng.integers(0, len(y), len(y))
+            self.trees.append(self._build(x[idx], y[idx], 0, rng, imp))
+        self.importances_ = imp / max(imp.sum(), 1e-12)
+        return self
+
+    def _pred_one(self, node, row):
+        while node.feat >= 0:
+            node = node.left if row[node.feat] <= node.thr else node.right
+        return node.value
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        out = np.zeros(len(x))
+        for t in self.trees:
+            out += np.array([self._pred_one(t, r) for r in x])
+        return out / len(self.trees)

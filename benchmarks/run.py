@@ -1,0 +1,62 @@
+"""Benchmark harness — one function per paper table/figure plus system
+benches. Prints ``name,value,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only substring] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _suites(fast: bool):
+    from benchmarks import metaopt_benches as mb
+    from benchmarks import system_benches as sb
+    suites = [
+        ("toy_problem", mb.bench_toy_problem),            # Figs 2/3/8/9
+        ("completion_rate", mb.bench_completion_rate),    # Table 1
+        ("hyperband_brackets", mb.bench_hyperband_brackets),  # Table 2
+        ("ht_vs_hyperband", mb.bench_ht_vs_hyperband),    # Table 3 / Fig 6
+        ("hparam_importance", mb.bench_hparam_importance),  # Table 4
+        ("beyond_paper", mb.bench_beyond_paper_policies),   # §6 extensions
+        ("roofline", sb.bench_roofline),                  # Roofline section
+        ("kernels", sb.bench_kernels),
+    ]
+    if not fast:
+        suites += [
+            ("ga3c_throughput", sb.bench_ga3c_throughput),
+            ("lm_train_step", sb.bench_lm_train_step),
+            ("metaopt_rl_real", mb.bench_metaopt_rl_real),
+        ]
+    return suites
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    print("name,value,derived")
+    failures = 0
+    for name, fn in _suites(args.fast):
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            failures += 1
+            continue
+        for rname, value, derived in rows:
+            v = f"{value:.6g}" if isinstance(value, float) else value
+            print(f'{rname},{v},"{derived}"')
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: HyperTrick in 40 lines.
+
+Metaoptimizes a synthetic objective with a planted optimum on a simulated
+heterogeneous cluster, then prints the paper's completion-rate math for the
+run. Runs in seconds on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.completion import expected_alpha, min_alpha
+from repro.core.executor import ThreadCluster
+from repro.core.hypertrick import HyperTrick
+from repro.core.search_space import LogUniform, SearchSpace
+
+W0, NODES, PHASES, R = 16, 4, 4, 0.25
+
+
+def objective(hparams, phase, state):
+    """A 'training run' whose quality depends on closeness of lr to 1e-3
+    and whose learning curve rises over phases."""
+    quality = -abs(np.log10(hparams["lr"]) - np.log10(1e-3))
+    curve = quality * (1 - np.exp(-(phase + 1) / 2.0))
+    noise = 0.05 * np.random.default_rng(phase).standard_normal()
+    return curve + noise, state
+
+
+def main():
+    space = SearchSpace({"lr": LogUniform(1e-5, 1e-1)})
+    policy = HyperTrick(space, w0=W0, n_phases=PHASES, eviction_rate=R,
+                        seed=0)
+    result = ThreadCluster(NODES, objective).run(policy)
+    s = result.summary()
+    print(f"explored {s['n_trials']} configurations "
+          f"({s['by_status'].get('killed', 0)} stopped early)")
+    print(f"best lr found: {s['best_hparams']['lr']:.2e}  (optimum: 1e-3)")
+    print(f"measured alpha: {s['alpha']:.3f}   "
+          f"min[alpha]={min_alpha(R, PHASES):.3f}  "
+          f"E[alpha]={expected_alpha(R, PHASES):.3f}   (paper Eqs. 8-9)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""llava-next-34b [vlm] — hf:llava-hf/llava-v1.6 (34B uses Nous-Hermes-Yi-34B LM).
+
+60L, d_model=7168, 56 heads (GQA kv=8), d_ff=20480, vocab=64000, anyres tiling.
+The ViT/SigLIP vision tower + projector are a STUB: input_specs() provides
+patch embeddings (B, n_image_tokens, d_model) interleaved before the text.
+"""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register
+
+CONFIG = register(ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf (34B variant dims)",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    pattern=(("attn", "mlp"),),
+    rope_theta=5_000_000.0,
+    n_image_tokens=2880,         # anyres: ~5 tiles x 576 patch tokens
+    long_context_window=8192,
+))

@@ -1,0 +1,25 @@
+"""xlstm-1.3b [ssm] — arXiv:2405.04517.
+
+48 blocks, d_model=2048, 4 heads (kv=4), vocab=50304, d_ff=0 (xLSTM blocks own
+their up/down projections). xLSTM[7:1]: 7 mLSTM blocks per sLSTM block.
+O(1) decode state -> native long-context support.
+"""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import register
+
+_PATTERN = tuple(("slstm" if i == 3 else "mlstm", None) for i in range(8))
+
+CONFIG = register(ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    source="arXiv:2405.04517",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    pattern=_PATTERN,
+    use_rope=False,
+    norm="layernorm",
+))

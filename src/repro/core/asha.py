@@ -1,0 +1,49 @@
+"""ASHA — asynchronous Successive Halving (Li et al. 2018), the partial
+mitigation the paper cites for SH's synchronization problem (§2). Included
+as a beyond-paper baseline: like HyperTrick it never blocks, but it uses
+rung-based promotion (top 1/eta of the reports at each rung so far,
+continuation variant) instead of the DCM/WSM early-worker rule.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core.search_space import SearchSpace
+from repro.core.service import AsyncPolicy, Decision
+
+
+class ASHA(AsyncPolicy):
+    def __init__(self, space: SearchSpace, n_trials: int, n_phases: int,
+                 eta: int = 3, seed: int = 0, configs: Optional[list] = None):
+        self.space = space
+        self.n_trials = n_trials
+        self.n_phases = n_phases
+        self.eta = eta
+        self.rng = np.random.default_rng(seed)
+        self._configs = list(configs) if configs is not None else None
+        self._launched = 0
+        # rungs at phase indices eta^0-1, eta^1-1, ... (report counts gate
+        # promotion; the final phase completes unconditionally)
+        self.rungs = sorted({min(self.eta ** i, n_phases) - 1
+                             for i in range(0, 1 + max(1, int(
+                                 math.log(max(n_phases, 1), eta)) + 1))})
+
+    def next_hparams(self):
+        if self._launched >= self.n_trials:
+            return None
+        self._launched += 1
+        if self._configs is not None:
+            return self._configs[self._launched - 1]
+        return self.space.sample(self.rng)
+
+    def on_report(self, trial_id, phase, metric, prior_reports) -> Decision:
+        if phase not in self.rungs or phase >= self.n_phases - 1:
+            return Decision.CONTINUE
+        stats = self.db.metrics_for_phase(phase)
+        if len(stats) < self.eta:            # not enough evidence yet
+            return Decision.CONTINUE
+        cut = float(np.quantile(np.asarray(stats), 1.0 - 1.0 / self.eta))
+        return Decision.CONTINUE if metric >= cut else Decision.STOP

@@ -1,0 +1,69 @@
+"""Evolutionary HyperTrick — the extension the paper proposes in §6:
+"the additional resources released by HyperTrick may be employed to further
+improve the metaoptimization process, for instance ... by mixing the
+hyperparameters of fast learners, or reinitializing terminated agents with
+new sets of promising hyperparameters."
+
+Same DCM/WSM eviction rule as HyperTrick; the difference is ``next_hparams``:
+after a warmup fraction of fresh samples, freed nodes restart from a MUTATED
+copy of a top-quartile configuration (PBT-style explore) instead of a fresh
+random sample.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.core.hypertrick import HyperTrick
+from repro.core.search_space import (Categorical, LogUniform, QLogUniform,
+                                     SearchSpace, Uniform)
+
+
+class EvolutionaryHyperTrick(HyperTrick):
+    def __init__(self, space: SearchSpace, w0: int, n_phases: int,
+                 eviction_rate: float, seed: int = 0,
+                 warmup_frac: float = 0.5, mutate_prob: float = 0.8):
+        super().__init__(space, w0, n_phases, eviction_rate, seed=seed)
+        self.warmup = max(1, int(warmup_frac * w0))
+        self.mutate_prob = mutate_prob
+
+    def _mutate(self, hp: dict) -> dict:
+        out = dict(hp)
+        for name, param in self.space.params.items():
+            v = out[name]
+            if isinstance(param, LogUniform):
+                out[name] = float(np.clip(v * self.rng.choice([0.5, 0.8,
+                                                               1.25, 2.0]),
+                                          param.lo, param.hi))
+            elif isinstance(param, QLogUniform):
+                out[name] = int(np.clip(round(v * self.rng.choice(
+                    [0.5, 0.8, 1.25, 2.0])), param.lo, param.hi))
+            elif isinstance(param, Categorical):
+                vals = list(param.values)
+                i = vals.index(v) if v in vals else 0
+                j = int(np.clip(i + self.rng.choice([-1, 0, 1]), 0,
+                                len(vals) - 1))
+                out[name] = vals[j]
+            elif isinstance(param, Uniform):
+                span = 0.2 * (param.hi - param.lo)
+                out[name] = float(np.clip(v + self.rng.uniform(-span, span),
+                                          param.lo, param.hi))
+        return out
+
+    def next_hparams(self) -> Optional[dict]:
+        if self._launched >= self.w0:
+            return None
+        self._launched += 1
+        if self._launched <= self.warmup \
+                or self.rng.uniform() > self.mutate_prob:
+            return self.space.sample(self.rng)
+        # exploit: mutate a top-quartile configuration from the DB
+        done = [t for t in self.db.trials.values() if t.reports]
+        if not done:
+            return self.space.sample(self.rng)
+        done.sort(key=lambda t: -(t.best_metric or -math.inf))
+        top = done[: max(1, len(done) // 4)]
+        parent = top[int(self.rng.integers(len(top)))]
+        return self._mutate(parent.hparams)

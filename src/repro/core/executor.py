@@ -1,0 +1,153 @@
+"""Real-execution cluster backends (threads standing in for MagLev nodes).
+
+* ThreadCluster — asynchronous policies (HyperTrick, random search): each
+  node-thread pulls a configuration, runs phases of the REAL objective, and
+  polls the optimization service after every phase. No barriers anywhere.
+* SyncCluster   — synchronized Successive Halving / Hyperband with real
+  objectives: phase barriers; "preemption" is trivially the in-process
+  trainer state being kept while the worker is paused (which is exactly the
+  support HyperTrick does not need).
+
+Objectives have the signature  objective(hparams, phase, state) ->
+(metric, state)  where state carries the live trainer across phases.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import traceback
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from repro.core.completion import Bracket
+from repro.core.service import (AsyncPolicy, Decision, OptimizationService,
+                                TrialStatus)
+
+
+@dataclass
+class ExecRecord:
+    trial_id: int
+    node: int
+    phase: int
+    t_start: float
+    t_end: float
+    metric: float
+
+
+@dataclass
+class ExecResult:
+    service: OptimizationService
+    records: List[ExecRecord]
+    wall_time: float
+    n_nodes: int
+
+    @property
+    def occupancy(self) -> float:
+        busy = sum(r.t_end - r.t_start for r in self.records)
+        return busy / (self.n_nodes * self.wall_time) if self.wall_time else 0.0
+
+    def summary(self) -> dict:
+        s = self.service.db.summary()
+        s.update(wall_time=round(self.wall_time, 2),
+                 occupancy=round(self.occupancy, 3),
+                 alpha=round(self.service.db.completion_rate(
+                     self.service.policy.n_phases), 4))
+        return s
+
+
+class ThreadCluster:
+    def __init__(self, n_nodes: int, objective: Callable):
+        self.n_nodes = n_nodes
+        self.objective = objective
+
+    def run(self, policy: AsyncPolicy) -> ExecResult:
+        svc = OptimizationService(policy)
+        records: List[ExecRecord] = []
+        rec_lock = threading.Lock()
+        t0 = time.monotonic()
+
+        def node_loop(node: int):
+            while True:
+                trial = svc.acquire_trial(node)
+                if trial is None:
+                    return
+                state = None
+                for phase in range(policy.n_phases):
+                    t_start = time.monotonic() - t0
+                    try:
+                        metric, state = self.objective(trial.hparams, phase,
+                                                       state)
+                    except Exception:
+                        traceback.print_exc()
+                        svc.crash(trial.trial_id)  # local effect only
+                        break
+                    t_end = time.monotonic() - t0
+                    with rec_lock:
+                        records.append(ExecRecord(trial.trial_id, node,
+                                                  phase, t_start, t_end,
+                                                  metric))
+                    if svc.report(trial.trial_id, phase,
+                                  metric) == Decision.STOP:
+                        break
+
+        with ThreadPoolExecutor(self.n_nodes) as pool:
+            list(pool.map(node_loop, range(self.n_nodes)))
+        return ExecResult(svc, records, time.monotonic() - t0, self.n_nodes)
+
+
+class SyncCluster:
+    """Successive-Halving-style synchronized execution with real objectives."""
+
+    def __init__(self, n_nodes: int, objective: Callable):
+        self.n_nodes = n_nodes
+        self.objective = objective
+
+    def run_sh(self, configs: List[dict], n_phases: int,
+               evict_frac: float) -> ExecResult:
+        """Vanilla SH: barrier per phase, bottom evict_frac terminated."""
+        from repro.core.hypertrick import RandomSearchPolicy
+        from repro.core.search_space import SearchSpace
+        policy = RandomSearchPolicy(SearchSpace({}), len(configs), n_phases,
+                                    configs=configs)
+        svc = OptimizationService(policy)
+        trials = [svc.acquire_trial(i % self.n_nodes)
+                  for i in range(len(configs))]
+        states = {t.trial_id: None for t in trials}
+        survivors = list(trials)
+        records: List[ExecRecord] = []
+        t0 = time.monotonic()
+
+        for phase in range(n_phases):
+            results = []
+
+            def run_one(args):
+                idx, trial = args
+                t_start = time.monotonic() - t0
+                metric, states[trial.trial_id] = self.objective(
+                    trial.hparams, phase, states[trial.trial_id])
+                t_end = time.monotonic() - t0
+                return (trial, metric, idx % self.n_nodes, t_start, t_end)
+
+            with ThreadPoolExecutor(self.n_nodes) as pool:
+                results = list(pool.map(run_one, enumerate(survivors)))
+            # barrier happened; report + evict bottom fraction
+            for trial, metric, node, ts, te in results:
+                svc.db.report(trial.trial_id, phase, metric,
+                              time.monotonic() - t0)
+                records.append(ExecRecord(trial.trial_id, node, phase, ts,
+                                          te, metric))
+            keep = max(1, len(survivors)
+                       - int(round(evict_frac * len(survivors))))
+            ranked = sorted(results, key=lambda r: -r[1])
+            kept_ids = {r[0].trial_id for r in ranked[:keep]}
+            now = time.monotonic() - t0
+            for trial, *_ in results:
+                last = phase + 1 >= n_phases
+                if trial.trial_id not in kept_ids:
+                    svc.db.set_status(trial.trial_id, TrialStatus.KILLED, now)
+                elif last:
+                    svc.db.set_status(trial.trial_id, TrialStatus.COMPLETED,
+                                      now)
+            survivors = [t for t in survivors if t.trial_id in kept_ids]
+        return ExecResult(svc, records, time.monotonic() - t0, self.n_nodes)

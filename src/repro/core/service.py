@@ -1,0 +1,175 @@
+"""The hyperparameter-optimization service (the MagLev analogue).
+
+A thread-safe service backed by a central knowledge database. Workers
+(threads or simulated nodes) acquire trials, report a metric at the end of
+each phase, and are told whether to continue — exactly the worker protocol
+of paper §3.1/§3.2. The *policy* (HyperTrick, random search, ...) is
+pluggable via ``AsyncPolicy``.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+class Decision(enum.Enum):
+    CONTINUE = "continue"
+    STOP = "stop"
+
+
+class TrialStatus(enum.Enum):
+    RUNNING = "running"
+    COMPLETED = "completed"     # ran all phases
+    KILLED = "killed"           # evicted by the policy
+    CRASHED = "crashed"         # worker failure (local effect only, §3.2)
+
+
+@dataclass
+class TrialRecord:
+    trial_id: int
+    hparams: Dict[str, Any]
+    status: TrialStatus = TrialStatus.RUNNING
+    node: Optional[int] = None
+    # per-phase: (metric, wall_time_reported)
+    reports: List[tuple] = field(default_factory=list)
+    start_time: float = 0.0
+    end_time: Optional[float] = None
+
+    @property
+    def phases_completed(self) -> int:
+        return len(self.reports)
+
+    @property
+    def last_metric(self) -> Optional[float]:
+        return self.reports[-1][0] if self.reports else None
+
+    @property
+    def best_metric(self) -> Optional[float]:
+        return max(r[0] for r in self.reports) if self.reports else None
+
+
+class KnowledgeDB:
+    """Central store of trials, configurations, and reported metrics."""
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self.trials: Dict[int, TrialRecord] = {}
+        # phase -> list of metrics in report order (the stats WSM quantiles use)
+        self.phase_metrics: Dict[int, List[float]] = {}
+
+    def add_trial(self, rec: TrialRecord):
+        with self._lock:
+            self.trials[rec.trial_id] = rec
+
+    def report(self, trial_id: int, phase: int, metric: float,
+               now: float) -> int:
+        """Record a phase-end report; returns the number of reports already
+        filed for this phase *before* this one."""
+        with self._lock:
+            rec = self.trials[trial_id]
+            assert rec.phases_completed == phase, (
+                f"trial {trial_id} reported phase {phase} but has "
+                f"{rec.phases_completed} reports")
+            prior = len(self.phase_metrics.get(phase, []))
+            self.phase_metrics.setdefault(phase, []).append(metric)
+            rec.reports.append((metric, now))
+            return prior
+
+    def metrics_for_phase(self, phase: int) -> List[float]:
+        with self._lock:
+            return list(self.phase_metrics.get(phase, []))
+
+    def set_status(self, trial_id: int, status: TrialStatus,
+                   now: Optional[float] = None):
+        with self._lock:
+            rec = self.trials[trial_id]
+            rec.status = status
+            if status != TrialStatus.RUNNING:
+                rec.end_time = now
+
+    def best_trial(self) -> Optional[TrialRecord]:
+        with self._lock:
+            done = [t for t in self.trials.values() if t.reports]
+            if not done:
+                return None
+            return max(done, key=lambda t: t.best_metric)
+
+    def completion_rate(self, n_phases: int) -> float:
+        """Measured worker completion rate alpha (paper §5.2.3)."""
+        with self._lock:
+            total = sum(t.phases_completed for t in self.trials.values())
+            return total / (n_phases * max(len(self.trials), 1))
+
+    def summary(self) -> dict:
+        with self._lock:
+            by_status: Dict[str, int] = {}
+            for t in self.trials.values():
+                by_status[t.status.value] = by_status.get(t.status.value, 0) + 1
+            best = self.best_trial()
+            return {
+                "n_trials": len(self.trials),
+                "by_status": by_status,
+                "best_metric": best.best_metric if best else None,
+                "best_hparams": best.hparams if best else None,
+            }
+
+
+class AsyncPolicy:
+    """A metaoptimization policy for asynchronous execution. Subclasses:
+    HyperTrick, RandomSearchPolicy."""
+
+    n_phases: int = 1
+
+    def bind(self, db: KnowledgeDB):
+        self.db = db
+
+    def next_hparams(self) -> Optional[Dict[str, Any]]:
+        """Next configuration to explore, or None when the budget is spent."""
+        raise NotImplementedError
+
+    def on_report(self, trial_id: int, phase: int, metric: float,
+                  prior_reports: int) -> Decision:
+        raise NotImplementedError
+
+
+class OptimizationService:
+    """Thread-safe facade the workers talk to (report / acquire / query)."""
+
+    def __init__(self, policy: AsyncPolicy, clock=time.monotonic):
+        self.db = KnowledgeDB()
+        policy.bind(self.db)
+        self.policy = policy
+        self.clock = clock
+        self._lock = threading.RLock()
+        self._next_id = 0
+
+    def acquire_trial(self, node: Optional[int] = None) -> Optional[TrialRecord]:
+        with self._lock:
+            hp = self.policy.next_hparams()
+            if hp is None:
+                return None
+            rec = TrialRecord(self._next_id, hp, node=node,
+                              start_time=self.clock())
+            self._next_id += 1
+            self.db.add_trial(rec)
+            return rec
+
+    def report(self, trial_id: int, phase: int, metric: float) -> Decision:
+        with self._lock:
+            now = self.clock()
+            prior = self.db.report(trial_id, phase, metric, now)
+            decision = self.policy.on_report(trial_id, phase, metric, prior)
+            if phase >= self.policy.n_phases - 1:
+                self.db.set_status(trial_id, TrialStatus.COMPLETED, now)
+                return Decision.STOP
+            if decision == Decision.STOP:
+                self.db.set_status(trial_id, TrialStatus.KILLED, now)
+            return decision
+
+    def crash(self, trial_id: int):
+        """Worker failure: strictly local effect (paper §3.2)."""
+        with self._lock:
+            self.db.set_status(trial_id, TrialStatus.CRASHED, self.clock())

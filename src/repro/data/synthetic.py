@@ -1,0 +1,73 @@
+"""Deterministic synthetic LM data pipeline.
+
+Tokens are drawn from a seeded bigram chain so the stream has learnable
+structure (loss visibly decreases within a few hundred steps). The pipeline
+yields already-sharded global arrays when a mesh is provided.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import data_axes
+
+
+class BigramStream:
+    def __init__(self, vocab_size: int, seed: int = 0, branch: int = 8):
+        self.vocab = vocab_size
+        rng = np.random.default_rng(seed)
+        # each token can be followed by `branch` successors
+        self.table = rng.integers(0, vocab_size,
+                                  size=(vocab_size, branch)).astype(np.int32)
+        self.rng = rng
+
+    def sample(self, batch: int, seq: int) -> np.ndarray:
+        out = np.empty((batch, seq + 1), np.int32)
+        out[:, 0] = self.rng.integers(0, self.vocab, size=batch)
+        choice = self.rng.integers(0, self.table.shape[1],
+                                   size=(batch, seq))
+        for t in range(seq):
+            out[:, t + 1] = self.table[out[:, t], choice[:, t]]
+        return out
+
+
+class DataPipeline:
+    """Yields {'tokens','labels'} (+ modality stubs) batches."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                 mesh=None):
+        self.cfg = cfg
+        self.batch = batch
+        self.text_seq = seq - (cfg.n_image_tokens if cfg.family == "vlm" else 0)
+        self.stream = BigramStream(cfg.vocab_size, seed)
+        self.mesh = mesh
+        self.rng = np.random.default_rng(seed + 1)
+
+    def _put(self, arr, spec):
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        return jax.device_put(arr, NamedSharding(self.mesh, spec))
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        cfg = self.cfg
+        dp = data_axes(self.mesh) or None
+        chain = self.stream.sample(self.batch, self.text_seq)
+        batch = {
+            "tokens": self._put(chain[:, :-1], P(dp, None)),
+            "labels": self._put(chain[:, 1:], P(dp, None)),
+        }
+        if cfg.family == "vlm":
+            img = self.rng.standard_normal(
+                (self.batch, cfg.n_image_tokens, cfg.d_model)).astype(np.float32)
+            batch["image_embeds"] = self._put(img, P(dp, None, None))
+        if cfg.is_encdec:
+            enc = self.rng.standard_normal(
+                (self.batch, cfg.enc_seq, cfg.d_model)).astype(np.float32)
+            batch["enc_embeds"] = self._put(enc, P(dp, None, None))
+        return batch

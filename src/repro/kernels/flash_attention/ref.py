@@ -1,0 +1,3 @@
+"""Oracles for the flash kernel: the chunked online-softmax form (production
+path) and the plain quadratic form (small shapes)."""
+from repro.models.attention import chunked_attention, reference_attention  # noqa: F401

@@ -1,0 +1,2 @@
+"""Oracle: the sequential lax.scan selective scan from the model layer."""
+from repro.models.ssm import selective_scan_ref, selective_scan_assoc  # noqa: F401

@@ -1,0 +1,104 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x input-shape).
+
+``input_specs`` returns exactly what each step function consumes, with no
+device allocation — the dry-run lowers against these. The modality frontends
+(whisper conv/mel, llava ViT) are STUBS per the assignment: their outputs are
+frame/patch embeddings of the right shape.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.layers import data_axes
+from repro.models.model import cache_specs, init_cache
+from repro.models import schema as mschema
+
+
+def batch_spec(mesh, batch: int):
+    """Batch shards over all data axes it divides into; B==1 -> replicated."""
+    dp = data_axes(mesh)
+    if not dp:
+        return None
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    if batch % size == 0:
+        return dp if len(dp) > 1 else dp[0]
+    # try a prefix of the data axes (e.g. B=128 on pod*data=32 -> fine; B=1 -> none)
+    for cut in range(len(dp) - 1, 0, -1):
+        size = 1
+        for a in dp[:cut]:
+            size *= mesh.shape[a]
+        if batch % size == 0:
+            return dp[:cut] if cut > 1 else dp[0]
+    return None
+
+
+def effective_window(cfg: ModelConfig, shape: InputShape) -> int:
+    """long_500k on full-attention archs runs the documented sliding-window
+    variant; everything else runs native."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return cfg.long_context_window
+    return 0
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh=None,
+                model_shards: int = 1):
+    """Returns (args, in_specs) pytrees for the step function of shape.kind."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = batch_spec(mesh, B) if mesh is not None else None
+    tok = jax.ShapeDtypeStruct
+    win = effective_window(cfg, shape)
+
+    def extras(sdict, sspec):
+        if cfg.family == "vlm":
+            sdict["image_embeds"] = tok((B, cfg.n_image_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+            sspec["image_embeds"] = P(dp, None, None)
+        if cfg.is_encdec:
+            sdict["enc_embeds"] = tok((B, cfg.enc_seq, cfg.d_model),
+                                      jnp.bfloat16)
+            sspec["enc_embeds"] = P(dp, None, None)
+
+    if shape.kind == "train":
+        s_text = S - (cfg.n_image_tokens if cfg.family == "vlm" else 0)
+        batch = {"tokens": tok((B, s_text), jnp.int32),
+                 "labels": tok((B, s_text), jnp.int32)}
+        bspec = {"tokens": P(dp, None), "labels": P(dp, None)}
+        extras(batch, bspec)
+        return {"batch": batch}, {"batch": bspec}
+
+    if shape.kind == "prefill":
+        s_text = S - (cfg.n_image_tokens if cfg.family == "vlm" else 0)
+        batch = {"tokens": tok((B, s_text), jnp.int32)}
+        bspec = {"tokens": P(dp, None)}
+        extras(batch, bspec)
+        cache = init_cache(cfg, B, S, window_override=win,
+                           model_shards=model_shards, abstract=True)
+        cspec = cache_specs(cfg, long_batch_one=(B == 1))
+        return ({"batch": batch, "cache": cache},
+                {"batch": bspec, "cache": cspec})
+
+    # decode: one token against a cache of S
+    cache = init_cache(cfg, B, S, window_override=win,
+                       model_shards=model_shards, abstract=True)
+    cspec = cache_specs(cfg, long_batch_one=(B == 1))
+    args = {"cache": cache, "token": tok((B, 1), jnp.int32),
+            "pos": tok((), jnp.int32)}
+    specs = {"cache": cspec, "token": P(dp, None), "pos": P()}
+    return args, specs
+
+
+def param_shardings(cfg: ModelConfig, mesh, model_shards: int):
+    specs = mschema.param_specs(cfg, model_shards)
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), specs)
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,71 @@
+"""HyperTrick metaoptimization driver — the paper's technique as a
+first-class feature over ANY registered objective.
+
+  # paper-faithful: tune GA3C on a mini-Atari game
+  PYTHONPATH=src python -m repro.launch.tune --objective rl --game pong \\
+      --workers 12 --nodes 4 --phases 5 --eviction-rate 0.25
+
+  # framework integration: tune LM training of a zoo architecture
+  PYTHONPATH=src python -m repro.launch.tune --objective lm --arch yi-9b \\
+      --workers 8 --nodes 2 --phases 4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core.executor import ThreadCluster
+from repro.core.hypertrick import HyperTrick, RandomSearchPolicy
+from repro.core.completion import expected_alpha, min_alpha
+from repro.core.search_space import lm_space, paper_rl_space
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--objective", choices=["rl", "lm"], default="rl")
+    ap.add_argument("--game", default="pong")
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--workers", type=int, default=12)     # W0
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--phases", type=int, default=5)       # N_p
+    ap.add_argument("--eviction-rate", type=float, default=0.25)
+    ap.add_argument("--episodes-per-phase", type=int, default=60)
+    ap.add_argument("--steps-per-phase", type=int, default=25)
+    ap.add_argument("--policy", choices=["hypertrick", "random"],
+                    default="hypertrick")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.objective == "rl":
+        from repro.rl.ga3c import make_rl_objective
+        space = paper_rl_space()
+        objective = make_rl_objective(args.game, args.episodes_per_phase,
+                                      seed=args.seed)
+    else:
+        from repro.train.trainer import make_lm_objective
+        space = lm_space()
+        objective = make_lm_objective(args.arch, args.steps_per_phase,
+                                      seed=args.seed)
+
+    if args.policy == "hypertrick":
+        policy = HyperTrick(space, args.workers, args.phases,
+                            args.eviction_rate, seed=args.seed)
+    else:
+        policy = RandomSearchPolicy(space, args.workers, args.phases,
+                                    seed=args.seed)
+
+    cluster = ThreadCluster(args.nodes, objective)
+    result = cluster.run(policy)
+    summary = result.summary()
+    summary["expected_alpha"] = expected_alpha(args.eviction_rate, args.phases)
+    summary["min_alpha"] = min_alpha(args.eviction_rate, args.phases)
+    print(json.dumps(summary, indent=2, default=str))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(summary, f, indent=2, default=str)
+    return result
+
+
+if __name__ == "__main__":
+    main()

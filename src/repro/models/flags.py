@@ -1,0 +1,14 @@
+"""Module-level lowering flags.
+
+UNROLL_INNER: when True, bounded inner scans (attention KV chunks, mLSTM
+chunkwise chunks) lower unrolled instead of as while loops. XLA's HLO cost
+model counts a while-loop body once regardless of trip count, so the dry-run
+sets this during its shallow cost-measurement compiles to get exact
+FLOP/byte/collective counts. Numerics are identical either way.
+"""
+UNROLL_INNER = [False]
+
+
+def inner_unroll(n: int):
+    """Unroll factor for an inner scan of length n."""
+    return n if UNROLL_INNER[0] else 1

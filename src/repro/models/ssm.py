@@ -1,0 +1,116 @@
+"""Mamba (selective state-space) block: conv1d + input-dependent SSM scan.
+
+The training/prefill path scans over the sequence with ``lax.scan`` (this is
+also the oracle for the Pallas ``selective_scan`` kernel); decode is a single
+recurrence step against the cached (conv window, SSM state).
+State cache: {'conv': (B, k-1, d_inner), 'ssm': (B, d_inner, d_state)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import norm
+
+
+def _ssm_params(cfg: ModelConfig, p, x_conv):
+    """x_conv: (..., di) -> dt (...,di), B (...,st), C (...,st)."""
+    di = cfg.ssm_d_inner
+    st = cfg.ssm_d_state
+    bcd = x_conv @ p["x_proj"]
+    dt_raw, b_ssm, c_ssm = jnp.split(bcd, [cfg.dt_rank, cfg.dt_rank + st], -1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])
+    return dt, b_ssm, c_ssm
+
+
+def selective_scan_assoc(u, dt, a, b, c, d_skip, h0):
+    """Parallel selective scan via ``lax.associative_scan`` (the TPU-idiomatic
+    training/prefill form; the Pallas kernel and the sequential reference
+    implement the same recurrence). Linear recurrence h_t = A_t h_{t-1} + B_t
+    composes associatively as (A, B) o (A', B') = (A'A, A'B + B')."""
+    uf = u.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf[..., None] * a)                     # (B,S,di,st)
+    db_u = (dtf * uf)[..., None] * b.astype(jnp.float32)[:, :, None, :]
+    # fold h0 into the first element
+    db_u = db_u.at[:, 0].add(da[:, 0] * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (da, db_u), axis=1)
+    y = jnp.einsum("bsdt,bst->bsd", hs, c.astype(jnp.float32))
+    y = y + uf * d_skip
+    return y.astype(u.dtype), hs[:, -1]
+
+
+def selective_scan_ref(u, dt, a, b, c, d_skip, h0):
+    """Sequential reference scan.
+
+    u, dt: (B, S, di); a: (di, st); b, c: (B, S, st); h0: (B, di, st).
+    Returns y: (B, S, di), hS: (B, di, st).
+    """
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs               # (B,di),(B,di),(B,st),(B,st)
+        da = jnp.exp(dt_t[..., None] * a)      # (B,di,st)
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (u.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          b.transpose(1, 0, 2), c.transpose(1, 0, 2))
+    hS, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                          jax.tree.map(lambda t: t.astype(jnp.float32), xs))
+    y = ys.transpose(1, 0, 2) + u.astype(jnp.float32) * d_skip
+    return y.astype(u.dtype), hS
+
+
+def _causal_conv(cfg: ModelConfig, p, x, conv_state=None):
+    """Depthwise causal conv along S. x: (B,S,di). conv_state: (B,k-1,di)."""
+    k = cfg.ssm_conv
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)     # (B, S+k-1, di)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(k))
+    new_state = xp[:, -(k - 1):]
+    return jax.nn.silu(out + p["conv_b"]), new_state
+
+
+def mamba_block(cfg: ModelConfig, p, x, *, mode: str, cache=None, mesh=None):
+    """x: (B,S,D). Returns (y, new_cache)."""
+    B, S, D = x.shape
+    h = norm(cfg, p, x)
+    xz = h @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)           # (B,S,di) each
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    conv_state = cache["conv"] if cache is not None else None
+    u_conv, new_conv = _causal_conv(cfg, p, u, conv_state)
+    dt, b_ssm, c_ssm = _ssm_params(cfg, p, u_conv)
+
+    h0 = (cache["ssm"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((B, cfg.ssm_d_inner, cfg.ssm_d_state), jnp.float32))
+    if mode == "decode" and S == 1:
+        da = jnp.exp(dt[:, 0, :, None] * a)
+        hS = da * h0 + (dt[:, 0] * u_conv[:, 0])[..., None] * b_ssm[:, 0][:, None, :]
+        y = jnp.einsum("bds,bs->bd", hS, c_ssm[:, 0].astype(jnp.float32))
+        y = (y + u_conv[:, 0].astype(jnp.float32) * p["d_skip"])[:, None]
+    elif mode == "decode":  # multi-token decode chunk: sequential reference
+        y, hS = selective_scan_ref(u_conv, dt, a, b_ssm, c_ssm,
+                                   p["d_skip"], h0)
+    else:  # train / prefill: parallel associative form
+        y, hS = selective_scan_assoc(u_conv, dt, a, b_ssm, c_ssm,
+                                     p["d_skip"], h0)
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": hS.astype(cache["ssm"].dtype)}
+    return x + out, new_cache

@@ -1,0 +1,206 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory with per-head recurrent gating), both with exponential
+gating and the max-stabilizer trick.
+
+State caches:
+  mLSTM: {'C': (B,H,hd,hd), 'n': (B,H,hd), 'm': (B,H)}
+  sLSTM: {'c': (B,D), 'n': (B,D), 'm': (B,D), 'h': (B,D)}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flags
+from repro.models.layers import norm
+
+MLSTM_CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def _mlstm_scan(q, k, v, ig, fg, state):
+    """q,k,v: (B,S,H,hd); ig,fg: (B,S,H). Recurrent matrix-memory scan."""
+    def step(carry, xs):
+        C, n, m = carry                                  # (B,H,hd,hd) ...
+        q_t, k_t, v_t, i_t, f_t = xs
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_e = jnp.exp(i_t - m_new)                       # (B,H)
+        f_e = jnp.exp(f_t + m - m_new)
+        C = f_e[..., None, None] * C + i_e[..., None, None] * (
+            v_t[..., :, None] * k_t[..., None, :])       # v k^T
+        n = f_e[..., None] * n + i_e[..., None] * k_t
+        num = jnp.einsum("bhvk,bhk->bhv", C, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (q, k, v)) + tuple(
+        t.transpose(1, 0, 2) for t in (ig, fg))
+    (C, n, m), hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3), (C, n, m)           # (B,S,H,hd)
+
+
+def _mlstm_chunkwise(q, k, v, ig, fg, state, chunk=MLSTM_CHUNK):
+    """Chunkwise-parallel mLSTM (the form that makes xLSTM trainable on
+    accelerators): intra-chunk attention-like term + inter-chunk recurrent
+    state, exactly equal to the sequential scan (same stabilizer algebra).
+
+    q,k,v: (B,S,H,hd); ig,fg: (B,S,H) (fg already log-sigmoid).
+    state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)).
+    """
+    B, S, H, hd = q.shape
+    c = min(chunk, S)
+    if S % c:
+        # pad to a chunk multiple with -inf input gates (no-op steps)
+        pad = c - S % c
+        padf = lambda t, val=0.0: jnp.pad(
+            t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2),
+            constant_values=val)
+        q, k, v = padf(q), padf(k), padf(v)
+        ig, fg = padf(ig, -1e30), padf(fg, 0.0)
+        Sp = S + pad
+    else:
+        Sp = S
+    nc = Sp // c
+    resh4 = lambda t: t.reshape(B, nc, c, H, hd).transpose(1, 0, 2, 3, 4)
+    resh3 = lambda t: t.reshape(B, nc, c, H).transpose(1, 0, 2, 3)
+    qs, ks, vs = resh4(q), resh4(k), resh4(v)
+    igs, fgs = resh3(ig), resh3(fg)
+
+    def body(carry, xs):
+        C0, n0, m0 = carry                       # (B,H,hd,hd),(B,H,hd),(B,H)
+        qc, kc, vc, ic, fc = xs                  # (B,c,H,hd)/(B,c,H)
+        F = jnp.cumsum(fc, axis=1)               # (B,c,H) log cumulative decay
+        Fc = F[:, -1]                            # (B,H)
+        # intra-chunk decay D[t,j] = F_t - F_j + i_j (j <= t)
+        D = (F.transpose(0, 2, 1)[:, :, :, None]
+             - F.transpose(0, 2, 1)[:, :, None, :]
+             + ic.transpose(0, 2, 1)[:, :, None, :])        # (B,H,c,c)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        D = jnp.where(tri, D, -jnp.inf)
+        m_intra = D.max(axis=-1)                             # (B,H,c)
+        m_state = F.transpose(0, 2, 1) + m0[:, :, None]      # (B,H,c)
+        m_t = jnp.maximum(m_intra, m_state)
+        dec_state = jnp.exp(m_state - m_t)                   # (B,H,c)
+        P = jnp.exp(D - m_t[..., None])                      # (B,H,c,c)
+        Sqk = jnp.einsum("bthd,bjhd->bhtj", qc, kc)          # (B,H,c,c)
+        num = (dec_state[..., None]
+               * jnp.einsum("bhvk,bthk->bhtv", C0, qc)
+               + jnp.einsum("bhtj,bhtj,bjhv->bhtv", P, Sqk, vc))
+        n_t = (dec_state[..., None] * n0[:, :, None, :]
+               + jnp.einsum("bhtj,bjhk->bhtk", P, kc))       # (B,H,c,hd)
+        qn = jnp.einsum("bhtk,bthk->bht", n_t, qc)
+        den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+        h = (num / den[..., None]).transpose(0, 2, 1, 3)     # (B,c,H,hd)
+        # chunk-end state
+        m_new = jnp.maximum(Fc + m0, D[:, :, -1, :].max(axis=-1))
+        w = jnp.exp((Fc[:, :, None] - F.transpose(0, 2, 1)
+                     + ic.transpose(0, 2, 1)) - m_new[:, :, None])  # (B,H,c)
+        C1 = (jnp.exp(Fc + m0 - m_new)[..., None, None] * C0
+              + jnp.einsum("bhj,bjhv,bjhk->bhvk", w, vc, kc))
+        n1 = (jnp.exp(Fc + m0 - m_new)[..., None] * n0
+              + jnp.einsum("bhj,bjhk->bhk", w, kc))
+        return (C1, n1, m_new), h
+
+    # stays a while loop even in cost-measurement compiles: the per-chunk
+    # hd^2 einsums make unrolled XLA emission intractable on the CPU
+    # backend; roofline costs add an analytic correction instead
+    # (roofline.analysis.sequential_scan_correction).
+    (C, n, m), hs = jax.lax.scan(body, state, (qs, ks, vs, igs, fgs))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, hd)[:, :S]
+    return hs, (C, n, m)
+
+
+def mlstm_block(cfg: ModelConfig, p, x, *, mode: str, cache=None, mesh=None):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    h = norm(cfg, p, x)
+    di = p["up_proj"].shape[1] // 2
+    hd = di // H
+    xm, z = jnp.split(h @ p["up_proj"], 2, axis=-1)
+    xh = xm.reshape(B, S, H, hd)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["wq"]).astype(jnp.float32)
+    k = (jnp.einsum("bshd,hde->bshe", xh, p["wk"]) * hd ** -0.5
+         ).astype(jnp.float32)
+    v = jnp.einsum("bshd,hde->bshe", xh, p["wv"]).astype(jnp.float32)
+    ig = (xm @ p["w_igate"] + p["b_igate"]).astype(jnp.float32)     # (B,S,H)
+    fg = jax.nn.log_sigmoid(
+        (xm @ p["w_fgate"] + p["b_fgate"]).astype(jnp.float32))
+
+    if cache is not None:
+        state = (cache["C"].astype(jnp.float32),
+                 cache["n"].astype(jnp.float32),
+                 cache["m"].astype(jnp.float32))
+    else:
+        state = (jnp.zeros((B, H, hd, hd), jnp.float32),
+                 jnp.zeros((B, H, hd), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+    if mode == "decode" or S <= 2:
+        hs, (C, n, m) = _mlstm_scan(q, k, v, ig, fg, state)
+    else:
+        hs, (C, n, m) = _mlstm_chunkwise(q, k, v, ig, fg, state)
+
+    out = hs.reshape(B, S, di).astype(x.dtype) * jax.nn.silu(z)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"C": C.astype(cache["C"].dtype),
+                     "n": n.astype(cache["n"].dtype),
+                     "m": m.astype(cache["m"].dtype)}
+    return x + out @ p["down_proj"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def _slstm_scan(gates_x, r_gates, state, H, hd):
+    """gates_x: (B,S,4,D) input pre-activations; r_gates: (H,hd,4*hd)."""
+    def step(carry, g_t):
+        c, n, m, h_prev = carry                          # (B,D) each
+        B = c.shape[0]
+        hp = h_prev.reshape(B, H, hd)
+        rec = jnp.einsum("bhd,hde->bhe", hp, r_gates).reshape(B, H, 4, hd)
+        rec = rec.transpose(0, 2, 1, 3).reshape(B, 4, H * hd)
+        gi, gf, gz, go = [g_t[:, j] + rec[:, j] for j in range(4)]
+        m_new = jnp.maximum(gf + m, gi)
+        i_e = jnp.exp(gi - m_new)
+        f_e = jnp.exp(gf + m - m_new)
+        z = jnp.tanh(gz)
+        o = jax.nn.sigmoid(go)
+        c = f_e * c + i_e * z
+        n = f_e * n + i_e
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    (c, n, m, h), hs = jax.lax.scan(step, state, gates_x.transpose(1, 0, 2, 3))
+    return hs.transpose(1, 0, 2), (c, n, m, h)
+
+
+def slstm_block(cfg: ModelConfig, p, x, *, mode: str, cache=None, mesh=None):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    h = norm(cfg, p, x)
+    gx = (h @ p["w_gates"] + p["b_gates"]).astype(jnp.float32)
+    gx = gx.reshape(B, S, 4, D)
+
+    if cache is not None:
+        state = tuple(cache[k].astype(jnp.float32) for k in "cnmh")
+    else:
+        state = (jnp.zeros((B, D), jnp.float32), jnp.zeros((B, D), jnp.float32),
+                 jnp.full((B, D), -1e30, jnp.float32),
+                 jnp.zeros((B, D), jnp.float32))
+    hs, (c, n, m, hN) = _slstm_scan(gx, p["r_gates"].astype(jnp.float32),
+                                    state, H, hd)
+    y = x + hs.astype(x.dtype)
+    # gated feed-forward (pf = 4/3)
+    up = jax.nn.silu(y @ p["w_gate"]) * (y @ p["w_up"])
+    out = y + up @ p["w_down"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {k: v.astype(cache[k].dtype)
+                     for k, v in zip("cnmh", (c, n, m, hN))}
+    return out, new_cache

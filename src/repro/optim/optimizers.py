@@ -1,0 +1,110 @@
+"""Pure-JAX optimizers.
+
+* ``rmsprop`` — non-centered RMSProp (Tieleman & Hinton 2012), exactly the
+  optimizer A3C/GA3C uses in the paper (shared statistics variant): one
+  accumulator, no momentum, no centering.
+* ``adamw`` — for the LM-training objectives.
+
+State is a pytree mirroring params; ``zero_sharded_opt`` reshards the
+accumulators over the 'data' axis (ZeRO-1 style) on the largest divisible dim.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    acc1: Any            # rmsprop: sq-avg; adam: m
+    acc2: Any            # adam: v; rmsprop: unused (None)
+
+
+def init_opt_state(tc: TrainConfig, params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    if tc.optimizer == "rmsprop":
+        return OptState(jnp.zeros((), jnp.int32), zeros, None)
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                 params))
+
+
+def learning_rate(tc: TrainConfig, step) -> jax.Array:
+    lr = jnp.asarray(tc.learning_rate, jnp.float32)
+    if tc.warmup_steps:
+        lr = lr * jnp.minimum(1.0, (step + 1) / tc.warmup_steps)
+    return lr
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = (jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+             if max_norm else jnp.float32(1.0))
+    return jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads), gn
+
+
+def apply_updates(tc: TrainConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, grad_norm)."""
+    grads, gnorm = _clip_by_global_norm(grads, tc.grad_clip)
+    lr = learning_rate(tc, state.step)
+    if tc.optimizer == "rmsprop":
+        # non-centered RMSProp: g2 <- d*g2 + (1-d)*g^2 ; p -= lr*g/sqrt(g2+eps)
+        d = tc.rmsprop_decay
+        acc1 = jax.tree.map(lambda a, g: d * a + (1 - d) * g * g,
+                            state.acc1, grads)
+        def upd(p, g, a):
+            return (p.astype(jnp.float32)
+                    - lr * g / jnp.sqrt(a + tc.rmsprop_eps)).astype(p.dtype)
+        new_params = jax.tree.map(upd, params, grads, acc1)
+        return new_params, OptState(state.step + 1, acc1, None), gnorm
+
+    # adamw
+    b1, b2 = tc.adam_b1, tc.adam_b2
+    t = state.step + 1
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, state.acc1, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, state.acc2, grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        step_ = lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + 1e-8)
+        pf = p.astype(jnp.float32)
+        if tc.weight_decay:
+            step_ = step_ + lr * tc.weight_decay * pf
+        return (pf - step_).astype(p.dtype)
+
+    return jax.tree.map(upd, params, m, v), OptState(t, m, v), gnorm
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: shard accumulators over 'data' on the largest divisible dim
+# ---------------------------------------------------------------------------
+def zero_spec(shape: tuple, spec: P, data_size: int) -> P:
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_size = -1, 0
+    for i, (n, s) in enumerate(zip(shape, dims)):
+        if s is None and n % data_size == 0 and n > best_size:
+            best, best_size = i, n
+    if best >= 0:
+        dims[best] = "data"
+    return P(*dims)
+
+
+def opt_state_specs(tc: TrainConfig, pspecs, abstract_params,
+                    data_size: int = 1) -> OptState:
+    def one():
+        if not tc.zero_sharded_opt or data_size <= 1:
+            return pspecs
+        return jax.tree.map(
+            lambda sp, sh: zero_spec(sh.shape, sp, data_size),
+            pspecs, abstract_params)
+    acc2 = one() if tc.optimizer != "rmsprop" else None
+    return OptState(P(), one(), acc2)

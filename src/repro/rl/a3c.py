@@ -1,0 +1,105 @@
+"""A3C losses and the vectorized t_max rollout (paper Eqs. 6-7).
+
+policy loss:  -log pi(a|s)[R~ - V(s)] - beta H[pi(s)]        (Eq. 6)
+value  loss:  [R~ - V(s)]^2                                  (Eq. 7)
+R~_t = sum_{i<k} gamma^i r_{t+i} + gamma^k V(s_{t+k}),  k <= t_max.
+
+t_max is BOTH the bias/variance knob of the bootstrapped critic AND the
+batch-size knob (t_max * n_envs samples per update) — the cost/quality
+coupling HyperTrick exploits (paper §5.1).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.base import Env, auto_reset
+from repro.rl.network import apply_net
+
+
+class Trajectory(NamedTuple):
+    obs: jax.Array       # (T, B, frames, G, G)
+    actions: jax.Array   # (T, B)
+    rewards: jax.Array   # (T, B)
+    dones: jax.Array     # (T, B)
+
+
+class LoopState(NamedTuple):
+    env_state: object
+    obs_stack: jax.Array   # (B, frames, G, G)
+    rng: jax.Array
+    ep_return: jax.Array   # (B,) running episode return
+    # episode-score bookkeeping
+    finished_sum: jax.Array
+    finished_n: jax.Array
+
+
+def init_loop_state(env: Env, n_envs: int, rng) -> LoopState:
+    rngs = jax.random.split(rng, n_envs + 1)
+    states, obs = jax.vmap(env.reset)(rngs[1:])
+    stack = jnp.stack([jnp.zeros_like(obs), obs], axis=1)
+    return LoopState(states, stack, rngs[0], jnp.zeros(n_envs),
+                     jnp.zeros(()), jnp.zeros(()))
+
+
+def rollout(env: Env, params, loop: LoopState, t_max: int):
+    """Collect t_max steps from every env; returns (traj, new loop state)."""
+
+    def step(carry, _):
+        ls = carry
+        rng, k_act, k_env = jax.random.split(ls.rng, 3)
+        logits, _ = apply_net(params, ls.obs_stack)
+        actions = jax.random.categorical(k_act, logits)
+        keys = jax.random.split(k_env, actions.shape[0])
+        env_state, obs, reward, done = jax.vmap(
+            partial(auto_reset, env))(ls.env_state, actions, keys)
+        stack = jnp.stack([ls.obs_stack[:, -1], obs], axis=1)
+        ep = ls.ep_return + reward
+        fin_sum = ls.finished_sum + jnp.sum(jnp.where(done, ep, 0.0))
+        fin_n = ls.finished_n + jnp.sum(done)
+        ep = jnp.where(done, 0.0, ep)
+        new = LoopState(env_state, stack, rng, ep, fin_sum, fin_n)
+        return new, (ls.obs_stack, actions, reward, done)
+
+    new_loop, (obs, actions, rewards, dones) = jax.lax.scan(
+        step, loop, None, length=t_max)
+    return Trajectory(obs, actions, rewards,
+                      dones.astype(jnp.float32)), new_loop
+
+
+def n_step_returns(rewards, dones, v_bootstrap, gamma: float):
+    """R~_t backwards from the bootstrap value (zeroed across terminals)."""
+    def back(R, xs):
+        r, d = xs
+        R = r + gamma * (1.0 - d) * R
+        return R, R
+
+    _, Rs = jax.lax.scan(back, v_bootstrap, (rewards[::-1], dones[::-1]))
+    return Rs[::-1]
+
+
+def a3c_loss(params, traj: Trajectory, v_bootstrap, *, gamma: float,
+             beta: float, value_coef: float = 0.5):
+    T, B = traj.actions.shape
+    obs = traj.obs.reshape((T * B,) + traj.obs.shape[2:])
+    logits, values = apply_net(params, obs)
+    logits = logits.reshape(T, B, -1)
+    values = values.reshape(T, B)
+
+    returns = n_step_returns(traj.rewards, traj.dones, v_bootstrap, gamma)
+    adv = returns - values
+
+    logp = jax.nn.log_softmax(logits)
+    p = jnp.exp(logp)
+    ent = -jnp.sum(p * logp, axis=-1)
+    logp_a = jnp.take_along_axis(logp, traj.actions[..., None], -1)[..., 0]
+
+    policy_loss = -jnp.mean(logp_a * jax.lax.stop_gradient(adv)) \
+        - beta * jnp.mean(ent)
+    value_loss = jnp.mean(adv ** 2)
+    loss = policy_loss + value_coef * value_loss
+    return loss, {"policy_loss": policy_loss, "value_loss": value_loss,
+                  "entropy": jnp.mean(ent)}

@@ -1,0 +1,43 @@
+"""Pure-JAX vectorized environment API.
+
+Environments are pure functions over NamedTuple states: ``reset(key)`` and
+``step(state, action, key)`` are jit/vmap-compatible, which is what lets the
+GA3C adaptation fuse simulation + inference + training into one compiled
+step (the Anakin/podracer TPU idiom — see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EnvSpec(NamedTuple):
+    name: str
+    n_actions: int
+    grid: int                 # observations are (grid, grid) grayscale
+    max_steps: int
+
+
+class Env:
+    spec: EnvSpec
+
+    def reset(self, key) -> Tuple[Any, jax.Array]:
+        raise NotImplementedError
+
+    def step(self, state, action, key) -> Tuple[Any, jax.Array, jax.Array,
+                                                jax.Array]:
+        """-> (state, obs, reward, done). Single-env semantics; vmap outside."""
+        raise NotImplementedError
+
+
+def auto_reset(env: Env, state, action, key):
+    """Step; on terminal, replace state/obs with a fresh episode (done is a
+    scalar here — batching happens via vmap around this function)."""
+    k_step, k_reset = jax.random.split(key)
+    state2, obs, reward, done = env.step(state, action, k_step)
+    state0, obs0 = env.reset(k_reset)
+    state_out = jax.tree.map(lambda a, b: jnp.where(done, b, a), state2,
+                             state0)
+    return state_out, jnp.where(done, obs0, obs), reward, done

@@ -1,0 +1,262 @@
+"""Four pure-JAX mini-games matching the reward-TIMING structure of the
+paper's Atari games (Atari ROMs are unavailable offline — see DESIGN.md §3):
+
+  * MiniPong   (Pong):      sparse +/-1 on point scored, short delay
+  * Duel       (Boxing):    dense immediate rewards for landing hits
+  * Shooter    (Centipede): DELAYED rewards (projectile travel time)
+  * PillMaze   (Ms-Pacman): dense pill rewards + terminal ghost risk
+
+All dynamics are integer/float lattice updates; observations render to a
+(grid, grid) float image in [0, 1]. Scripted opponents make the games
+genuinely learnable but not trivial.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.envs.base import Env, EnvSpec
+
+G = 16  # default grid
+
+
+def _img(*paint):
+    """paint: (y, x, value) triples -> (G,G) image."""
+    img = jnp.zeros((G, G), jnp.float32)
+    for y, x, v in paint:
+        yc = jnp.clip(jnp.round(y).astype(jnp.int32), 0, G - 1)
+        xc = jnp.clip(jnp.round(x).astype(jnp.int32), 0, G - 1)
+        img = img.at[yc, xc].max(v)
+    return img
+
+
+# ===========================================================================
+# MiniPong
+# ===========================================================================
+class PongState(NamedTuple):
+    ball: jax.Array      # (4,): y, x, vy, vx
+    pad: jax.Array       # agent paddle y (right edge)
+    opp: jax.Array       # opponent paddle y (left edge)
+    t: jax.Array
+    score: jax.Array     # running agent score (for the episode metric)
+
+
+class MiniPong(Env):
+    spec = EnvSpec("pong", 3, G, 256)
+
+    def reset(self, key):
+        ky, kv = jax.random.split(key)
+        vy = jax.random.choice(ky, jnp.array([-1.0, -0.5, 0.5, 1.0]))
+        vx = jax.random.choice(kv, jnp.array([-1.0, 1.0]))
+        st = PongState(
+            ball=jnp.array([G / 2, G / 2, 0.0, 0.0]) + jnp.array(
+                [0.0, 0.0, 1.0, 1.0]) * jnp.array([0.0, 0.0, vy, vx]),
+            pad=jnp.float32(G / 2), opp=jnp.float32(G / 2),
+            t=jnp.int32(0), score=jnp.float32(0))
+        return st, self._obs(st)
+
+    def _obs(self, s: PongState):
+        return _img((s.ball[0], s.ball[1], 1.0),
+                    (s.pad - 1, G - 1, 0.8), (s.pad, G - 1, 0.8),
+                    (s.pad + 1, G - 1, 0.8),
+                    (s.opp - 1, 0, 0.6), (s.opp, 0, 0.6),
+                    (s.opp + 1, 0, 0.6))
+
+    def step(self, s: PongState, action, key):
+        pad = jnp.clip(s.pad + jnp.where(action == 1, -1.0,
+                                         jnp.where(action == 2, 1.0, 0.0)),
+                       1, G - 2)
+        # scripted opponent tracks the ball with capped speed (imperfect)
+        opp = jnp.clip(s.opp + jnp.clip(s.ball[0] - s.opp, -0.55, 0.55),
+                       1, G - 2)
+        y, x, vy, vx = s.ball
+        y2, x2 = y + vy, x + vx
+        vy = jnp.where((y2 < 0) | (y2 > G - 1), -vy, vy)
+        y2 = jnp.clip(y2, 0, G - 1)
+        # paddle bounces
+        hit_agent = (x2 >= G - 2) & (jnp.abs(y2 - pad) <= 1.7) & (vx > 0)
+        hit_opp = (x2 <= 1) & (jnp.abs(y2 - opp) <= 1.7) & (vx < 0)
+        vx = jnp.where(hit_agent | hit_opp, -vx, vx)
+        x2 = jnp.clip(x2, 0, G - 1)
+        # scoring
+        agent_scores = (x2 <= 0) & ~hit_opp
+        opp_scores = (x2 >= G - 1) & ~hit_agent
+        reward = jnp.where(agent_scores, 1.0, jnp.where(opp_scores, -1.0, 0.0))
+        point = agent_scores | opp_scores
+        yn = jnp.where(point, G / 2, y2)
+        xn = jnp.where(point, G / 2, x2)
+        vxn = jnp.where(point, jnp.where(agent_scores, 1.0, -1.0), vx)
+        t = s.t + 1
+        st = PongState(jnp.stack([yn, xn, vy, vxn]), pad, opp, t,
+                       s.score + reward)
+        done = (t >= self.spec.max_steps) | (jnp.abs(st.score) >= 3)
+        return st, self._obs(st), reward, done
+
+
+# ===========================================================================
+# Duel (Boxing analogue: immediate dense rewards)
+# ===========================================================================
+class DuelState(NamedTuple):
+    me: jax.Array        # (2,) y, x
+    foe: jax.Array
+    t: jax.Array
+    score: jax.Array
+
+
+class Duel(Env):
+    spec = EnvSpec("boxing", 6, G, 200)  # 4 moves + stay + punch
+
+    def reset(self, key):
+        k1, k2 = jax.random.split(key)
+        me = jnp.float32(4) + jax.random.uniform(k1, (2,)) * (G - 8)
+        foe = jnp.float32(4) + jax.random.uniform(k2, (2,)) * (G - 8)
+        st = DuelState(me, foe, jnp.int32(0), jnp.float32(0))
+        return st, self._obs(st)
+
+    def _obs(self, s):
+        return _img((s.me[0], s.me[1], 1.0), (s.foe[0], s.foe[1], 0.5))
+
+    def step(self, s: DuelState, action, key):
+        k1, k2 = jax.random.split(key)
+        moves = jnp.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1], [0, 0]],
+                          jnp.float32)
+        me = jnp.clip(s.me + moves[action], 1, G - 2)
+        # scripted foe: approach + random jitter, punches when adjacent
+        d = me - s.foe
+        stepv = jnp.clip(d, -1, 1) + jax.random.uniform(k1, (2,), minval=-0.5,
+                                                        maxval=0.5)
+        foe = jnp.clip(s.foe + stepv, 1, G - 2)
+        dist = jnp.abs(me - foe).sum()
+        i_punch = (action == 5) & (dist <= 2.0)
+        foe_punch = (jax.random.uniform(k2) < 0.25) & (dist <= 2.0)
+        reward = jnp.where(i_punch, 1.0, 0.0) - jnp.where(foe_punch, 1.0, 0.0)
+        t = s.t + 1
+        st = DuelState(me, foe, t, s.score + reward)
+        done = t >= self.spec.max_steps
+        return st, self._obs(st), reward, done
+
+
+# ===========================================================================
+# Shooter (Centipede analogue: DELAYED rewards — bullet flight time)
+# ===========================================================================
+class ShooterState(NamedTuple):
+    gun_x: jax.Array
+    bullets: jax.Array       # (4, 2) y,x; y<0 = inactive
+    targets: jax.Array       # (G,) presence per column at row target_row
+    target_row: jax.Array
+    t: jax.Array
+    score: jax.Array
+
+
+class Shooter(Env):
+    spec = EnvSpec("centipede", 4, G, 256)  # stay, left, right, fire
+
+    def reset(self, key):
+        targets = (jax.random.uniform(key, (G,)) < 0.5).astype(jnp.float32)
+        st = ShooterState(jnp.float32(G // 2),
+                          -jnp.ones((4, 2), jnp.float32),
+                          targets, jnp.float32(1), jnp.int32(0),
+                          jnp.float32(0))
+        return st, self._obs(st)
+
+    def _obs(self, s):
+        img = jnp.zeros((G, G), jnp.float32)
+        row = jnp.clip(jnp.round(s.target_row).astype(jnp.int32), 0, G - 1)
+        img = img.at[row].max(s.targets * 0.7)
+        img = img.at[G - 1, jnp.round(s.gun_x).astype(jnp.int32)].max(1.0)
+        for i in range(4):
+            y = jnp.clip(jnp.round(s.bullets[i, 0]).astype(jnp.int32), 0, G - 1)
+            x = jnp.clip(jnp.round(s.bullets[i, 1]).astype(jnp.int32), 0, G - 1)
+            img = img.at[y, x].max(jnp.where(s.bullets[i, 0] >= 0, 0.4, 0.0))
+        return img
+
+    def step(self, s: ShooterState, action, key):
+        gun = jnp.clip(s.gun_x + jnp.where(action == 1, -1.0,
+                                           jnp.where(action == 2, 1.0, 0.0)),
+                       0, G - 1)
+        bullets = s.bullets.at[:, 0].add(
+            jnp.where(s.bullets[:, 0] >= 0, -1.0, 0.0))  # fly upward
+        # fire: activate the first inactive slot (reward arrives ~G steps later)
+        can_fire = (action == 3)
+        inactive = bullets[:, 0] < 0
+        slot = jnp.argmax(inactive)
+        fire = can_fire & inactive.any()
+        bullets = jnp.where(
+            fire & (jnp.arange(4)[:, None] == slot),
+            jnp.stack([jnp.full((4,), G - 2.0),
+                       jnp.full((4,), gun)], axis=1), bullets)
+        # hits: bullet reaches target row at a column with a target
+        row = s.target_row
+        bx = jnp.clip(jnp.round(bullets[:, 1]).astype(jnp.int32), 0, G - 1)
+        at_row = (bullets[:, 0] >= 0) & (bullets[:, 0] <= row + 0.5)
+        hit = at_row & (s.targets[bx] > 0)
+        reward = hit.sum().astype(jnp.float32)
+        targets = s.targets.at[bx].add(-jnp.where(hit, 1.0, 0.0))
+        targets = jnp.clip(targets, 0, 1)
+        bullets = bullets.at[:, 0].set(jnp.where(at_row, -1.0, bullets[:, 0]))
+        # respawn a full row when cleared, advancing downward slowly
+        cleared = targets.sum() < 0.5
+        key2 = jax.random.fold_in(key, 7)
+        targets = jnp.where(cleared,
+                            (jax.random.uniform(key2, (G,)) < 0.5)
+                            .astype(jnp.float32), targets)
+        t = s.t + 1
+        st = ShooterState(gun, bullets, targets, row, t, s.score + reward)
+        done = t >= self.spec.max_steps
+        return st, self._obs(st), reward, done
+
+
+# ===========================================================================
+# PillMaze (Ms-Pacman analogue)
+# ===========================================================================
+class MazeState(NamedTuple):
+    me: jax.Array       # (2,) int
+    ghost: jax.Array    # (2,) int
+    pills: jax.Array    # (G, G) 0/1
+    t: jax.Array
+    score: jax.Array
+
+
+class PillMaze(Env):
+    spec = EnvSpec("pacman", 5, G, 256)
+
+    def reset(self, key):
+        pills = (jax.random.uniform(key, (G, G)) < 0.25).astype(jnp.float32)
+        pills = pills.at[0, 0].set(0.0).at[G - 1, G - 1].set(0.0)
+        st = MazeState(jnp.array([G - 1, 0]), jnp.array([0, G - 1]), pills,
+                       jnp.int32(0), jnp.float32(0))
+        return st, self._obs(st)
+
+    def _obs(self, s):
+        img = s.pills * 0.3
+        img = img.at[s.me[0], s.me[1]].set(1.0)
+        img = img.at[s.ghost[0], s.ghost[1]].set(0.6)
+        return img
+
+    def step(self, s: MazeState, action, key):
+        moves = jnp.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]])
+        me = jnp.clip(s.me + moves[action], 0, G - 1)
+        # ghost: chase with prob .5, random otherwise
+        k1, k2 = jax.random.split(key)
+        chase = jnp.sign(me - s.ghost)
+        rand = moves[jax.random.randint(k1, (), 1, 5)]
+        gmove = jnp.where(jax.random.uniform(k2) < 0.5, chase, rand)
+        ghost = jnp.clip(s.ghost + gmove.astype(s.ghost.dtype), 0, G - 1)
+        ate = s.pills[me[0], me[1]] > 0
+        reward = jnp.where(ate, 1.0, 0.0)
+        pills = s.pills.at[me[0], me[1]].set(0.0)
+        caught = jnp.all(me == ghost)
+        t = s.t + 1
+        st = MazeState(me, ghost, pills, t, s.score + reward)
+        done = caught | (t >= self.spec.max_steps) | (pills.sum() < 0.5)
+        return st, self._obs(st), reward, done
+
+
+GAMES = {"pong": MiniPong, "boxing": Duel, "centipede": Shooter,
+         "pacman": PillMaze}
+
+
+def make_env(name: str) -> Env:
+    return GAMES[name]()

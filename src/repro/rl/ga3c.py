@@ -1,0 +1,114 @@
+"""GA3C adapted to JAX (DESIGN.md §3): the prediction/training queues of the
+GPU implementation dissolve because environments are on-device — simulation,
+batched inference, and the update fuse into ONE jitted train step over
+n_envs vectorized agents. Hyperparameter semantics (lr, gamma, t_max, beta)
+are preserved exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.optim.optimizers import OptState, apply_updates, init_opt_state
+from repro.rl.a3c import LoopState, a3c_loss, init_loop_state, rollout
+from repro.rl.envs.minigames import make_env
+from repro.rl.network import A3CNetConfig, apply_net, init_net
+
+
+@dataclass
+class GA3CHyperParams:
+    learning_rate: float = 3e-4
+    gamma: float = 0.99
+    t_max: int = 8
+    beta: float = 0.01
+
+
+class GA3CTrainer:
+    """One GA3C worker: trains a policy on one game. ``run_episodes`` is the
+    phase unit HyperTrick schedules (paper: 2500 episodes/phase)."""
+
+    def __init__(self, game: str, hp: GA3CHyperParams, n_envs: int = 32,
+                 seed: int = 0):
+        self.env = make_env(game)
+        self.hp = hp
+        self.n_envs = n_envs
+        rng = jax.random.PRNGKey(seed)
+        k_net, k_env = jax.random.split(rng)
+        net_cfg = A3CNetConfig(grid=self.env.spec.grid,
+                               n_actions=self.env.spec.n_actions)
+        self.params = init_net(net_cfg, k_net)
+        self.tc = TrainConfig(learning_rate=hp.learning_rate,
+                              optimizer="rmsprop", rmsprop_decay=0.99,
+                              rmsprop_eps=0.1, grad_clip=5.0)
+        self.opt_state = init_opt_state(self.tc, self.params)
+        self.loop = init_loop_state(self.env, n_envs, k_env)
+        self.episodes = 0
+        self.updates = 0
+        self._last_scores: list = []
+        self._step = jax.jit(self._make_step())
+
+    def _make_step(self):
+        env, hp, tc = self.env, self.hp, self.tc
+
+        def train_step(params, opt_state: OptState, loop: LoopState):
+            traj, new_loop = rollout(env, params, loop, hp.t_max)
+            _, v_boot = apply_net(params, new_loop.obs_stack)
+            v_boot = v_boot * (1.0 - traj.dones[-1])
+            grads, metrics = jax.grad(
+                lambda p: a3c_loss(p, traj, v_boot, gamma=hp.gamma,
+                                   beta=hp.beta),
+                has_aux=True)(params)
+            params, opt_state, gn = apply_updates(tc, params, grads,
+                                                  opt_state)
+            metrics["grad_norm"] = gn
+            return params, opt_state, new_loop, metrics
+
+        return train_step
+
+    def run_episodes(self, n_episodes: int, max_updates: int = 10_000):
+        """Train until n_episodes finish; returns the mean score of the
+        episodes completed in this phase (the metric reported to the
+        metaopt service)."""
+        start_sum = float(self.loop.finished_sum)
+        start_n = float(self.loop.finished_n)
+        updates = 0
+        while (float(self.loop.finished_n) - start_n) < n_episodes \
+                and updates < max_updates:
+            self.params, self.opt_state, self.loop, self._metrics = \
+                self._step(self.params, self.opt_state, self.loop)
+            updates += 1
+        self.updates += updates
+        n = float(self.loop.finished_n) - start_n
+        s = float(self.loop.finished_sum) - start_sum
+        self.episodes += int(n)
+        score = s / max(n, 1.0)
+        self._last_scores.append(score)
+        return score
+
+
+def make_rl_objective(game: str, episodes_per_phase: int, n_envs: int = 16,
+                      seed: int = 0, max_updates: int = 2000):
+    """Objective for the thread executor: objective(hparams, phase, state)
+    -> (metric, state). State carries the live trainer (no preemption needed
+    — HyperTrick never pauses a worker)."""
+
+    def objective(hparams: dict, phase: int, state):
+        if state is None:
+            hp = GA3CHyperParams(
+                learning_rate=float(hparams["learning_rate"]),
+                gamma=float(hparams["gamma"]),
+                t_max=int(hparams["t_max"]),
+                beta=float(hparams.get("beta", 0.01)))
+            state = GA3CTrainer(game, hp, n_envs=n_envs,
+                                seed=seed + hash(str(sorted(hparams.items())))
+                                % 10_000)
+        metric = state.run_episodes(episodes_per_phase,
+                                    max_updates=max_updates)
+        return metric, state
+
+    return objective

@@ -1,0 +1,66 @@
+"""The A3C/GA3C DNN (Mnih et al. 2016, scaled to our grid observations):
+two conv layers + one fully-connected layer, with a policy softmax head and
+a linear value head."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class A3CNetConfig:
+    grid: int = 16
+    frames: int = 2
+    n_actions: int = 4
+    c1: int = 16
+    c2: int = 32
+    fc: int = 128
+
+
+def _conv_out(g, k, s):
+    return (g - k) // s + 1
+
+
+def init_net(cfg: A3CNetConfig, rng) -> Dict[str, jax.Array]:
+    ks = jax.random.split(rng, 5)
+    g1 = _conv_out(cfg.grid, 4, 2)
+    g2 = _conv_out(g1, 3, 1)
+    flat = cfg.c2 * g2 * g2
+
+    def he(key, shape, fan_in):
+        return (jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)
+                ).astype(jnp.float32)
+
+    return {
+        "c1w": he(ks[0], (cfg.c1, cfg.frames, 4, 4), cfg.frames * 16),
+        "c1b": jnp.zeros((cfg.c1,)),
+        "c2w": he(ks[1], (cfg.c2, cfg.c1, 3, 3), cfg.c1 * 9),
+        "c2b": jnp.zeros((cfg.c2,)),
+        "fcw": he(ks[2], (flat, cfg.fc), flat),
+        "fcb": jnp.zeros((cfg.fc,)),
+        "pw": he(ks[3], (cfg.fc, cfg.n_actions), cfg.fc) * 0.01,
+        "pb": jnp.zeros((cfg.n_actions,)),
+        "vw": he(ks[4], (cfg.fc, 1), cfg.fc),
+        "vb": jnp.zeros((1,)),
+    }
+
+
+def apply_net(params, obs):
+    """obs: (B, frames, G, G) -> (logits (B, A), value (B,))."""
+    x = obs.astype(jnp.float32)
+    x = jax.lax.conv_general_dilated(
+        x, params["c1w"], (2, 2), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    x = jax.nn.relu(x + params["c1b"][None, :, None, None])
+    x = jax.lax.conv_general_dilated(
+        x, params["c2w"], (1, 1), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    x = jax.nn.relu(x + params["c2b"][None, :, None, None])
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fcw"] + params["fcb"])
+    logits = x @ params["pw"] + params["pb"]
+    value = (x @ params["vw"] + params["vb"])[:, 0]
+    return logits, value

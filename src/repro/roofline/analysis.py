@@ -1,0 +1,258 @@
+"""Roofline terms from a compiled (dry-run) artifact.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+``cost_analysis()`` supplies per-device FLOPs/bytes of the SPMD-partitioned
+module. Collective bytes are not in cost_analysis: we parse the compiled HLO
+and sum the data each collective moves per device, using ring-algorithm
+factors: all-gather/reduce-scatter move (n-1)/n of the full tensor, an
+all-reduce moves 2(n-1)/n, an all-to-all (n-1)/n, a collective-permute 1x.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shapes>.*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+[0-9]*[a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(?P<g>[0-9,]+)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shapes_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 2
+    dims = [int(x) for x in m.group("g").split(",")]
+    return dims[-1] if len(dims) > 1 else dims[0]
+
+
+# per-device traffic factor for ring algorithms, as multiple of tensor bytes
+def _factor(op: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op in ("all-gather", "reduce-scatter", "all-to-all"):
+        return (n - 1) / n
+    return 1.0  # collective-permute
+
+
+@dataclass
+class CollectiveStats:
+    bytes_moved: float = 0.0
+    counts: dict = field(default_factory=dict)
+    bytes_by_op: dict = field(default_factory=dict)
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("(")[0]:
+            continue  # async pair: count the -start only
+        op = m.group("op")
+        b = _shape_bytes(m.group("shapes"))
+        n = _group_size(line)
+        moved = b * _factor(op, n)
+        stats.bytes_moved += moved
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0.0) + moved
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # per device
+    hlo_bytes: float              # per device
+    coll_bytes: float             # per device
+    model_flops: float            # analytic 6*N*D (global)
+    peak_bytes_per_device: float  # from memory_analysis
+    coll_counts: dict
+    variant: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / hw.HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / hw.ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        tot = self.hlo_flops * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def fits_hbm(self) -> bool:
+        return self.peak_bytes_per_device <= hw.HBM_BYTES
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 fits_hbm=self.fits_hbm)
+        return d
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float, variant: str = "") -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    txt = compiled.as_text()
+    coll = collective_bytes(txt)
+    peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=float(ca.get("flops", 0.0)),
+        hlo_bytes=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes=coll.bytes_moved,
+        model_flops=model_flops,
+        peak_bytes_per_device=float(peak),
+        coll_counts=coll.counts,
+        variant=variant)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D for inference forward;
+    N = active params, D = processed tokens."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * n * toks
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def sequential_scan_correction(cfg, shape, mesh) -> tuple:
+    """Analytic (flops, bytes) per device for inherently-sequential inner
+    scans that even the unrolled cost compile counts once (trip count = seq
+    len, far too long to unroll). Today that is only the sLSTM recurrence:
+    per step per (B, D): a (hd x 4hd) per-head recurrent matmul + O(1)
+    elementwise gate math, with the (c, n, m, h) state resident in VMEM/HBM.
+    """
+    if shape.kind == "decode":
+        return 0.0, 0.0
+    n_slstm = sum(1 for m, _ in cfg.pattern if m == "slstm")
+    n_mlstm = sum(1 for m, _ in cfg.pattern if m == "mlstm")
+    if not (n_slstm or n_mlstm):
+        return 0.0, 0.0
+    dp = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            dp *= mesh.shape[a]
+    b_local = max(1, shape.global_batch // dp)
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    s = shape.seq_len
+    train_mult = 3 if shape.kind == "train" else 1   # fwd + bwd(2x)
+    flops = bytes_ = 0.0
+    if n_slstm:
+        nl = n_slstm * cfg.n_repeat
+        flops += nl * s * b_local * (2 * d * 4 * hd + 20 * d)
+        bytes_ += nl * s * b_local * (8 * d * 4)     # state r/w per step, f32
+    if n_mlstm:
+        # chunkwise-parallel mLSTM (chunk c): intra-chunk attention-like
+        # terms ~6 B H S c hd_i, state interaction ~4 B H S hd_i^2,
+        # C-state traffic ~3 B H hd_i^2 per chunk. hd_i = pf*d/H.
+        from repro.models.xlstm import MLSTM_CHUNK
+        from repro.models.schema import _pad_to
+        di = _pad_to(int(cfg.xlstm_pf_mlstm * d), cfg.n_heads)
+        h = cfg.n_heads
+        hdi = di // h
+        c = min(MLSTM_CHUNK, s)
+        nl = n_mlstm * cfg.n_repeat
+        flops += nl * b_local * h * (6.0 * s * c * hdi + 4.0 * s * hdi * hdi)
+        bytes_ += nl * b_local * h * (s / c) * 3.0 * hdi * hdi * 4
+    return float(flops * train_mult), float(bytes_ * train_mult)
+
+
+def moe_gmm_correction(cfg, shape, mesh) -> float:
+    """FLOPs correction for MoE layers: XLA-CPU lowers ``lax.ragged_dot`` as
+    a DENSE all-experts matmul (verified: cost ratio == E), while the TPU
+    target uses the Pallas ``gmm`` grouped-matmul kernel with true grouped
+    FLOPs. Returns the (negative) per-device FLOPs delta to apply.
+    """
+    if not cfg.n_experts:
+        return 0.0
+    n_moe = sum(1 for _, f in cfg.pattern if f == "moe") * cfg.n_repeat
+    if not n_moe:
+        return 0.0
+    mp = mesh.shape.get("model", 1)
+    dp = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            dp *= mesh.shape[a]
+    if shape.kind == "decode":
+        toks = max(1, shape.global_batch // dp)
+    else:
+        toks = max(1, shape.global_batch // dp) * shape.seq_len
+    d, f, e, k = (cfg.d_model, cfg.expert_d_ff, cfg.n_experts, cfg.top_k)
+    n_dots = 3 if cfg.act == "silu" else 2
+    ep = e >= mp and e % mp == 0
+    if ep:
+        if getattr(cfg, "moe_impl", "psum") == "a2a" \
+                and shape.seq_len % mp == 0 and shape.kind != "decode":
+            rows = max(int(toks / mp * k / mp * cfg.capacity_factor) + 1,
+                       1) * mp   # mp peers x capacity
+        else:
+            rows = int(toks * k / mp * cfg.capacity_factor) + 1
+        e_local = e // mp
+        over = n_dots * 2.0 * rows * d * f * (e_local - 1)
+    else:
+        rows = toks * k
+        over = n_dots * 2.0 * rows * d * (f / mp) * (e - 1)
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return -over * n_moe * mult

@@ -1,0 +1,6 @@
+"""TPU v5e hardware constants (per chip) used by the roofline analysis."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link
+HBM_BYTES = 16 * 1024 ** 3    # 16 GiB HBM per chip

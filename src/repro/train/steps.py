@@ -1,0 +1,104 @@
+"""pjit-able train / prefill / serve steps for every zoo architecture.
+
+The LM loss chunks over the sequence so (B, S, V) logits never materialize:
+per chunk, logits are computed against the vocab-sharded unembedding and
+reduced with a logsumexp (SPMD inserts the partial-max/sum collectives).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.layers import norm
+from repro.models.model import forward, logits_fn
+from repro.optim.optimizers import OptState, apply_updates
+
+
+def _xent_chunk(cfg: ModelConfig, params, h, labels):
+    """h: (B, C, D), labels: (B, C) -> summed xent (f32 scalar)."""
+    logits = (h @ params["unembed"]).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = jnp.tanh(logits / cfg.final_softcap) * cfg.final_softcap
+    vpad = logits.shape[-1]
+    if vpad != cfg.vocab_size:  # mask vocab-padding columns
+        logits = jnp.where(jnp.arange(vpad) < cfg.vocab_size, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(lse - gold)
+
+
+def lm_loss(cfg: ModelConfig, params, hidden, labels, chunk: int = 1024):
+    """Chunked cross-entropy. hidden: (B, S, D); labels: (B, S)."""
+    h = norm(cfg, params, hidden, prefix="final_norm")
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+
+    def body(tot, xs):
+        hc, lc = xs
+        return tot + _xent_chunk(cfg, params, hc, lc), None
+
+    hc = h[:, : n * chunk].reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels[:, : n * chunk].reshape(B, n, chunk).transpose(1, 0, 2)
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    if S % chunk:
+        tot = tot + _xent_chunk(cfg, params, h[:, n * chunk:],
+                                labels[:, n * chunk:])
+    return tot / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None,
+                    unroll: bool = False):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        h, _, aux = forward(cfg, params, batch, mode="train", mesh=mesh,
+                            remat=tc.remat, unroll=unroll)
+        labels = batch["labels"]
+        if cfg.family == "vlm" and "image_embeds" in batch:
+            h = h[:, batch["image_embeds"].shape[1]:]  # text positions only
+        loss = lm_loss(cfg, params, h, labels, tc.loss_chunk)
+        return loss + aux, (loss, aux)
+
+    def train_step(params, opt_state: OptState, batch):
+        grads, (loss, aux) = jax.grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, gnorm = apply_updates(tc, params, grads, opt_state)
+        metrics = {"loss": loss, "aux_loss": aux, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, window_override: int = 0,
+                      unroll: bool = False):
+    """(params, batch, cache) -> (next_token_logits, cache)."""
+
+    def prefill_step(params, batch, cache):
+        h, cache, _ = forward(cfg, params, batch, mode="prefill", cache=cache,
+                              mesh=mesh, window_override=window_override,
+                              unroll=unroll)
+        logits = logits_fn(cfg, params, h[:, -1:])[:, 0]
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, window_override: int = 0,
+                    unroll: bool = False):
+    """One decode step: (params, cache, token (B,1), pos) -> (logits, cache)."""
+
+    def serve_step(params, cache, token, pos):
+        h, cache, _ = forward(cfg, params, {"tokens": token}, mode="decode",
+                              pos=pos, cache=cache, mesh=mesh,
+                              window_override=window_override, unroll=unroll)
+        logits = logits_fn(cfg, params, h)[:, 0]
+        return logits, cache
+
+    return serve_step

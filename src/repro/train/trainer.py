@@ -1,0 +1,75 @@
+"""LM Trainer: ties config -> params -> data -> jitted train_step.
+
+Used by examples/train_lm.py, the HyperTrick LM objective, and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.synthetic import DataPipeline
+from repro.models import schema as mschema
+from repro.optim.optimizers import init_opt_state
+from repro.train.steps import make_train_step
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig, batch: int,
+                 seq: int, mesh=None, seed: int = 0):
+        self.cfg = cfg
+        self.tc = tc
+        self.mesh = mesh
+        ms = mesh.shape.get("model", 1) if mesh is not None else 1
+        self.params = mschema.init_params(cfg, jax.random.PRNGKey(seed), ms)
+        self.opt_state = init_opt_state(tc, self.params)
+        self.data = DataPipeline(cfg, batch, seq, seed=seed, mesh=mesh)
+        self._step = jax.jit(make_train_step(cfg, tc, mesh=mesh),
+                             donate_argnums=(0, 1))
+        self.step_count = 0
+        self.losses: list = []
+
+    def run(self, steps: int, log_every: int = 0) -> float:
+        """Run `steps` updates; returns the mean loss of the last quarter."""
+        it = iter(self.data)
+        for i in range(steps):
+            batch = next(it)
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            self.losses.append(loss)
+            self.step_count += 1
+            if log_every and (i + 1) % log_every == 0:
+                print(f"step {self.step_count:5d}  loss {loss:.4f}  "
+                      f"grad_norm {float(metrics['grad_norm']):.3f}",
+                      flush=True)
+        tail = self.losses[-max(1, steps // 4):]
+        return sum(tail) / len(tail)
+
+
+def make_lm_objective(arch: str, steps_per_phase: int = 30, batch: int = 8,
+                      seq: int = 64, seed: int = 0):
+    """HyperTrick objective over a reduced-config LM: metric = -loss (higher
+    is better, matching the service's convention). The cost-affecting
+    hyperparameters (loss_chunk) make trial cost config-dependent — the
+    regime HyperTrick targets."""
+    from repro.configs.registry import get_config
+
+    def objective(hparams: dict, phase: int, state):
+        if state is None:
+            cfg = get_config(arch).reduced()
+            tc = TrainConfig(
+                learning_rate=float(hparams.get("learning_rate", 3e-4)),
+                optimizer=str(hparams.get("optimizer", "adamw")),
+                grad_clip=float(hparams.get("grad_clip", 1.0)),
+                warmup_steps=int(hparams.get("warmup_steps", 0)),
+                loss_chunk=int(hparams.get("loss_chunk", 1024)))
+            state = Trainer(cfg, tc, batch, seq, seed=seed)
+        mean_loss = state.run(steps_per_phase)
+        return -mean_loss, state
+
+    return objective

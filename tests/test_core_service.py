@@ -1,0 +1,160 @@
+"""Service, knowledge DB, simulator, and executor behaviour."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.executor import ThreadCluster
+from repro.core.completion import expected_alpha, paper_brackets
+from repro.core.hypertrick import HyperTrick, RandomSearchPolicy
+from repro.core.search_space import (Categorical, LogUniform, QLogUniform,
+                                     SearchSpace, paper_rl_space)
+from repro.core.service import (Decision, OptimizationService, TrialStatus)
+from repro.core.simulator import (GA3CWorkload, ToyWorkload, simulate_grid,
+                                  simulate_hyperband, simulate_hypertrick,
+                                  simulate_successive_halving)
+
+
+def test_search_space_bounds():
+    space = paper_rl_space()
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        hp = space.sample(rng)
+        assert 1e-5 <= hp["learning_rate"] <= 1e-2
+        assert 2 <= hp["t_max"] <= 100 and isinstance(hp["t_max"], int)
+        assert hp["gamma"] in (0.9, 0.95, 0.99, 0.995, 0.999, 0.9995, 0.9999)
+
+
+def test_service_lifecycle_and_crash_isolation():
+    space = SearchSpace({"lr": LogUniform(1e-4, 1e-2)})
+    policy = RandomSearchPolicy(space, n_trials=3, n_phases=2)
+    svc = OptimizationService(policy)
+    t0, t1, t2 = (svc.acquire_trial(i) for i in range(3))
+    assert svc.acquire_trial() is None          # budget spent
+    assert svc.report(t0.trial_id, 0, 1.0) == Decision.CONTINUE
+    svc.crash(t1.trial_id)                      # local effect only
+    assert svc.db.trials[t1.trial_id].status is TrialStatus.CRASHED
+    assert svc.report(t0.trial_id, 1, 2.0) == Decision.STOP  # final phase
+    assert svc.db.trials[t0.trial_id].status is TrialStatus.COMPLETED
+    assert svc.report(t2.trial_id, 0, 5.0) == Decision.CONTINUE
+    best = svc.db.best_trial()
+    assert best.trial_id == t2.trial_id and best.best_metric == 5.0
+
+
+def test_report_requires_in_order_phases():
+    policy = RandomSearchPolicy(SearchSpace({}), 1, 3, configs=[{}])
+    svc = OptimizationService(policy)
+    t = svc.acquire_trial()
+    with pytest.raises(AssertionError):
+        svc.report(t.trial_id, 1, 0.0)          # skipped phase 0
+
+
+# ---------------------------------------------------------------------------
+# simulator invariants
+# ---------------------------------------------------------------------------
+def _cfgs(n):
+    return [{"id": i} for i in range(n)]
+
+
+def test_grid_alpha_100():
+    r = simulate_grid(ToyWorkload(0), _cfgs(12), 4, 3, seed=0)
+    assert r.completion_rate == pytest.approx(1.0)
+    assert r.occupancy <= 1.0 + 1e-9
+
+
+def test_sh_completion_matches_eq9():
+    # vanilla SH with eviction r has completion rate == E[alpha] (paper
+    # §5.2.3), up to integer-rounding of the eviction counts
+    r = simulate_successive_halving(ToyWorkload(3), _cfgs(64), 8, 4, 0.25,
+                                    seed=3)
+    assert r.completion_rate == pytest.approx(expected_alpha(0.25, 4),
+                                              rel=0.06)
+
+
+def test_hypertrick_sim_runs_all_configs():
+    res = simulate_hypertrick(ToyWorkload(1), _cfgs(16), 6, 4, 0.25, seed=1)
+    workers = {e.worker for e in res.timeline}
+    assert workers == set(range(16))            # every config explored
+    assert res.makespan > 0 and 0 < res.occupancy <= 1
+    db = res.db
+    assert len(db.trials) == 16
+
+
+def test_static_sh_not_faster_than_dynamic():
+    mk_s, mk_d = [], []
+    for seed in range(8):
+        wl = lambda: ToyWorkload(seed, cost_spread=0.6)
+        mk_d.append(simulate_successive_halving(
+            wl(), _cfgs(16), 6, 4, 0.25, seed=seed).makespan)
+        mk_s.append(simulate_successive_halving(
+            wl(), _cfgs(16), 6, 4, 0.25, seed=seed, static=True).makespan)
+    assert np.mean(mk_s) >= np.mean(mk_d)
+
+
+def test_grid_slowest_on_average():
+    mk_g, mk_h = [], []
+    for seed in range(8):
+        wl = lambda: ToyWorkload(seed)
+        mk_g.append(simulate_grid(wl(), _cfgs(16), 6, 4, seed=seed).makespan)
+        mk_h.append(simulate_hypertrick(wl(), _cfgs(16), 6, 4, 0.25,
+                                        seed=seed).makespan)
+    assert np.mean(mk_g) > np.mean(mk_h)
+
+
+def test_hypertrick_beats_hyperband_in_paper_regime():
+    """Table 3 regime: same 46 configs, hyperparameter-dependent costs."""
+    from repro.core.completion import hyperband_alpha, solve_r_for_alpha
+    brackets = paper_brackets()
+    r = solve_r_for_alpha(hyperband_alpha(brackets), 27)
+    space = paper_rl_space()
+    mk_ht, mk_hb, oc_ht, oc_hb = [], [], [], []
+    for seed in range(5):
+        cfgs = space.sample_n(46, seed=seed)
+        wl = GA3CWorkload(seed=seed)
+        hb = simulate_hyperband(wl, cfgs, brackets, n_nodes=46, seed=seed)
+        ht = simulate_hypertrick(wl, cfgs, 46, 27, r, seed=seed)
+        mk_ht.append(ht.makespan)
+        mk_hb.append(hb.makespan)
+        oc_ht.append(ht.occupancy)
+        oc_hb.append(hb.occupancy)
+    assert np.mean(mk_ht) < np.mean(mk_hb)       # shorter wall time
+    assert np.mean(oc_ht) > np.mean(oc_hb)       # higher occupancy
+
+
+# ---------------------------------------------------------------------------
+# thread executor with a fast synthetic objective
+# ---------------------------------------------------------------------------
+def test_thread_cluster_hypertrick_finds_optimum():
+    space = SearchSpace({"x": LogUniform(0.01, 100.0)})
+
+    def objective(hp, phase, state):
+        # planted optimum at x=1; learning curve rises with phases
+        quality = -abs(np.log(hp["x"]))
+        return quality * (1 + 0.1 * phase), state
+
+    policy = HyperTrick(space, w0=24, n_phases=3, eviction_rate=0.3, seed=0)
+    res = ThreadCluster(4, objective).run(policy)
+    s = res.summary()
+    assert s["n_trials"] == 24
+    assert abs(np.log(s["best_hparams"]["x"])) < 1.5
+    assert 0 < s["alpha"] <= 1.0
+    killed = s["by_status"].get("killed", 0)
+    assert killed > 0                            # early stopping happened
+
+
+def test_thread_cluster_crash_is_local():
+    calls = {"n": 0}
+
+    def objective(hp, phase, state):
+        calls["n"] += 1
+        if hp["x"] > 0.9:                         # one config crashes
+            raise RuntimeError("boom")
+        return hp["x"], state
+
+    policy = RandomSearchPolicy(
+        SearchSpace({}), 4, 2,
+        configs=[{"x": 0.1}, {"x": 0.95}, {"x": 0.2}, {"x": 0.3}])
+    res = ThreadCluster(2, objective).run(policy)
+    sts = {t.hparams["x"]: t.status for t in res.service.db.trials.values()}
+    assert sts[0.95] is TrialStatus.CRASHED
+    assert sts[0.1] is TrialStatus.COMPLETED     # others unaffected

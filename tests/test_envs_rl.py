@@ -1,0 +1,109 @@
+"""Environments, A3C math, GA3C trainer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.rl.a3c import a3c_loss, init_loop_state, n_step_returns, rollout
+from repro.rl.envs.base import auto_reset
+from repro.rl.envs.minigames import GAMES, make_env
+from repro.rl.ga3c import GA3CHyperParams, GA3CTrainer
+from repro.rl.network import A3CNetConfig, apply_net, init_net
+
+
+@pytest.mark.parametrize("game", sorted(GAMES))
+def test_env_shapes_and_ranges(game):
+    env = make_env(game)
+    key = jax.random.PRNGKey(0)
+    state, obs = env.reset(key)
+    assert obs.shape == (env.spec.grid, env.spec.grid)
+    total_done = 0
+    for t in range(600):
+        key, ka, ks = jax.random.split(key, 3)
+        a = jax.random.randint(ka, (), 0, env.spec.n_actions)
+        state, obs, reward, done = auto_reset(env, state, a, ks)
+        assert obs.shape == (env.spec.grid, env.spec.grid)
+        assert float(obs.min()) >= 0.0 and float(obs.max()) <= 1.0
+        assert not np.isnan(float(reward))
+        total_done += int(done)
+    assert total_done >= 1       # episodes terminate
+
+
+@pytest.mark.parametrize("game", sorted(GAMES))
+def test_env_vmap(game):
+    env = make_env(game)
+    keys = jax.random.split(jax.random.PRNGKey(1), 5)
+    states, obs = jax.vmap(env.reset)(keys)
+    assert obs.shape == (5, env.spec.grid, env.spec.grid)
+    acts = jnp.zeros(5, jnp.int32)
+    keys2 = jax.random.split(jax.random.PRNGKey(2), 5)
+    states, obs, r, d = jax.vmap(lambda s, a, k: auto_reset(env, s, a, k))(
+        states, acts, keys2)
+    assert r.shape == (5,) and d.shape == (5,)
+
+
+def test_n_step_returns_manual():
+    # T=3, B=1, gamma=0.5, bootstrap=8: R2 = r2 + .5*8 = 1+4 = 5;
+    # R1 = r1 + .5*R2 = 0+2.5; R0 = r0 + .5*R1 = 2+1.25
+    rewards = jnp.array([[2.0], [0.0], [1.0]])
+    dones = jnp.zeros((3, 1))
+    out = n_step_returns(rewards, dones, jnp.array([8.0]), 0.5)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), [3.25, 2.5, 5.0])
+
+
+def test_n_step_returns_terminal_cuts_bootstrap():
+    rewards = jnp.array([[1.0], [1.0]])
+    dones = jnp.array([[1.0], [0.0]])     # terminal after step 0
+    out = n_step_returns(rewards, dones, jnp.array([100.0]), 0.9)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), [1.0, 91.0])
+
+
+@given(gamma=st.floats(0.5, 0.999), t=st.integers(2, 8))
+@settings(max_examples=20, deadline=None)
+def test_n_step_returns_matches_direct_sum(gamma, t):
+    rng = np.random.default_rng(0)
+    r = rng.standard_normal((t, 1)).astype(np.float32)
+    v = np.float32(rng.standard_normal())
+    out = n_step_returns(jnp.asarray(r), jnp.zeros((t, 1)),
+                         jnp.asarray([v]), gamma)
+    direct = [sum(gamma ** i * r[k + i, 0] for i in range(t - k))
+              + gamma ** (t - k) * v for k in range(t)]
+    np.testing.assert_allclose(np.asarray(out[:, 0]), direct, rtol=1e-5)
+
+
+def test_a3c_loss_grads_finite():
+    env = make_env("pong")
+    net = init_net(A3CNetConfig(grid=env.spec.grid,
+                                n_actions=env.spec.n_actions),
+                   jax.random.PRNGKey(0))
+    loop = init_loop_state(env, 4, jax.random.PRNGKey(1))
+    traj, loop = rollout(env, net, loop, t_max=5)
+    _, v_boot = apply_net(net, loop.obs_stack)
+    grads, aux = jax.grad(
+        lambda p: a3c_loss(p, traj, v_boot, gamma=0.99, beta=0.01),
+        has_aux=True)(net)
+    for g in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(g)).all()
+    assert float(aux["entropy"]) > 0
+
+
+def test_ga3c_trainer_boxing_learns():
+    tr = GA3CTrainer("boxing", GA3CHyperParams(learning_rate=1e-3, gamma=0.9,
+                                               t_max=8), n_envs=16, seed=0)
+    first = tr.run_episodes(24, max_updates=400)
+    for _ in range(3):
+        last = tr.run_episodes(24, max_updates=400)
+    assert last > first            # dense-reward game improves quickly
+
+
+def test_t_max_changes_batch_size():
+    """The paper's central cost coupling: t_max sets samples per update."""
+    env = make_env("pong")
+    net = init_net(A3CNetConfig(grid=env.spec.grid,
+                                n_actions=env.spec.n_actions),
+                   jax.random.PRNGKey(0))
+    loop = init_loop_state(env, 4, jax.random.PRNGKey(1))
+    for t_max in (2, 7):
+        traj, _ = rollout(env, net, loop, t_max=t_max)
+        assert traj.obs.shape[0] == t_max

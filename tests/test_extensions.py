@@ -1,0 +1,56 @@
+"""Beyond-paper extensions: ASHA baseline and evolutionary HyperTrick."""
+import numpy as np
+
+from repro.core.asha import ASHA
+from repro.core.evolution import EvolutionaryHyperTrick
+from repro.core.executor import ThreadCluster
+from repro.core.hypertrick import HyperTrick
+from repro.core.search_space import (Categorical, LogUniform, QLogUniform,
+                                     SearchSpace)
+
+
+def _objective(hp, phase, state):
+    q = -abs(np.log10(hp["lr"]) - np.log10(1e-3))
+    return q * (1 + 0.2 * phase), state
+
+
+SPACE = SearchSpace({"lr": LogUniform(1e-5, 1e-1),
+                     "t": QLogUniform(2, 64, 1),
+                     "g": Categorical((0.9, 0.99, 0.999))})
+
+
+def test_asha_runs_and_early_stops():
+    policy = ASHA(SPACE, n_trials=24, n_phases=9, eta=3, seed=0)
+    res = ThreadCluster(4, _objective).run(policy)
+    s = res.summary()
+    assert s["n_trials"] == 24
+    assert s["by_status"].get("killed", 0) > 0
+    assert s["alpha"] < 1.0
+    assert abs(np.log10(s["best_hparams"]["lr"]) + 3) < 1.5
+
+
+def test_evolutionary_hypertrick_exploits_parents():
+    policy = EvolutionaryHyperTrick(SPACE, w0=30, n_phases=3,
+                                    eviction_rate=0.25, seed=0,
+                                    warmup_frac=0.4, mutate_prob=1.0)
+    res = ThreadCluster(3, _objective).run(policy)
+    s = res.summary()
+    assert s["n_trials"] == 30
+    # post-warmup samples cluster around good lr: the mean |log lr - (-3)|
+    # of the last third of launched trials beats the first third's
+    trials = sorted(res.service.db.trials.values(), key=lambda t: t.trial_id)
+    d = [abs(np.log10(t.hparams["lr"]) + 3) for t in trials]
+    third = len(d) // 3
+    assert np.mean(d[-third:]) < np.mean(d[:third]) + 1e-9
+
+
+def test_evolution_mutation_respects_bounds():
+    policy = EvolutionaryHyperTrick(SPACE, w0=5, n_phases=2,
+                                    eviction_rate=0.25, seed=1)
+    hp = {"lr": 1e-5, "t": 2, "g": 0.9}
+    for _ in range(50):
+        m = policy._mutate(hp)
+        assert 1e-5 <= m["lr"] <= 1e-1
+        assert 2 <= m["t"] <= 64 and isinstance(m["t"], int)
+        assert m["g"] in (0.9, 0.99, 0.999)
+        hp = m

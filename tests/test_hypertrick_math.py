@@ -1,0 +1,110 @@
+"""HyperTrick's equations vs the paper's printed values + the Eq. (1)
+stationarity property as a statistical test (the paper proves it by
+induction; we verify the implementation realizes it)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.completion import (expected_alpha, hyperband_alpha,
+                                   hyperband_brackets, min_alpha,
+                                   paper_brackets, solve_r_for_alpha)
+from repro.core.hypertrick import HyperTrick, dcm_threshold, expected_workers
+from repro.core.search_space import SearchSpace, Uniform
+from repro.core.service import Decision, OptimizationService
+
+
+# ---------------------------------------------------------------------------
+# paper constants
+# ---------------------------------------------------------------------------
+def test_table1_alpha_values():
+    # Boxing/Centipede/MsPacman: Np=10, r=25% -> (18.87%, 37.75%)
+    assert min_alpha(0.25, 10) == pytest.approx(0.1887, abs=2e-4)
+    assert expected_alpha(0.25, 10) == pytest.approx(0.3775, abs=2e-4)
+    # Pong: Np=5 -> (30.51%, 61.02%)
+    assert min_alpha(0.25, 5) == pytest.approx(0.3051, abs=2e-4)
+    assert expected_alpha(0.25, 5) == pytest.approx(0.6102, abs=2e-4)
+
+
+def test_table2_bracket_alphas():
+    bs = paper_brackets()
+    assert [round(100 * b.alpha, 2) for b in bs] == [14.81, 33.33, 66.67,
+                                                     100.0]
+    assert hyperband_alpha(bs) == pytest.approx(0.3261, abs=1e-4)
+    # total configurations explored: 27 + 9 + 6 + 4 = 46 (paper §5.2.4)
+    assert sum(b.n[0] for b in bs) == 46
+
+
+def test_solve_r_matches_paper():
+    # E[alpha]=32.61%, Np=27 -> r ~= 10.8% (paper: 10.82%)
+    r = solve_r_for_alpha(0.3261, 27)
+    assert r == pytest.approx(0.108, abs=2e-3)
+
+
+def test_standard_hyperband_construction():
+    bs = hyperband_brackets(3, 27)
+    assert [b.s for b in bs] == [3, 2, 1, 0]
+    assert bs[0].n == [27, 9, 3, 1]
+    assert bs[0].r == [1, 3, 9, 27]
+    assert bs[-1].alpha == 1.0
+
+
+def test_dcm_threshold_eq2():
+    # W_p^DCM = W0 (1 - sqrt(r)) (1-r)^p — Fig. 2 worked example: W0=16,
+    # r=25% -> W_1^DCM = 6, W_2^DCM = 4.5, W_3^DCM ~ 3.4 (paper rounds to
+    # whole workers: 8, 6, 4 at phase *ends* counting phase 0 start pool)
+    assert dcm_threshold(16, 0.25, 0) == pytest.approx(8.0)
+    assert dcm_threshold(16, 0.25, 1) == pytest.approx(6.0)
+    assert dcm_threshold(16, 0.25, 2) == pytest.approx(4.5)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1) as a statistical property: stationary metrics -> E[W_p]=W0(1-r)^p
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("r", [0.25, 0.4])
+def test_expected_survivors_stationary(r):
+    w0, n_phases, reps = 200, 4, 8
+    survived = np.zeros(n_phases + 1)
+    for rep in range(reps):
+        rng = np.random.default_rng(rep)
+        policy = HyperTrick(SearchSpace({"x": Uniform(0, 1)}), w0, n_phases,
+                            r, seed=rep)
+        svc = OptimizationService(policy)
+        trials = [svc.acquire_trial() for _ in range(w0)]
+        alive = list(trials)
+        survived[0] += len(alive)
+        for phase in range(n_phases):
+            nxt = []
+            order = rng.permutation(len(alive))
+            for idx in order:
+                t = alive[idx]
+                metric = float(rng.standard_normal())  # stationary process
+                if svc.report(t.trial_id, phase, metric) == Decision.CONTINUE:
+                    nxt.append(t)
+            alive = nxt
+            survived[phase + 1] += len(alive)
+    survived /= reps
+    for p in range(1, n_phases):  # (last phase all STOP by completion)
+        expect = expected_workers(w0, r, p)
+        assert survived[p] == pytest.approx(expect, rel=0.12), \
+            f"phase {p}: {survived[p]} vs {expect}"
+
+
+@given(r=st.floats(0.05, 0.9), n=st.integers(1, 60))
+@settings(max_examples=60, deadline=None)
+def test_alpha_bounds_property(r, n):
+    """min[alpha] <= E[alpha] <= 1, and E[alpha] decreasing in r."""
+    lo, hi = min_alpha(r, n), expected_alpha(r, n)
+    assert 0 < lo <= hi <= 1.0 + 1e-9
+    assert expected_alpha(min(r + 0.05, 0.95), n) <= hi + 1e-9
+
+
+@given(alpha=st.floats(0.05, 0.95), n=st.integers(2, 40))
+@settings(max_examples=40, deadline=None)
+def test_solve_r_inverts_eq9(alpha, n):
+    lo = expected_alpha(1 - 1e-9, n)
+    if alpha <= lo:  # below the achievable range for this n
+        return
+    r = solve_r_for_alpha(alpha, n)
+    assert expected_alpha(r, n) == pytest.approx(alpha, rel=1e-4)

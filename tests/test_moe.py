@@ -1,0 +1,81 @@
+"""MoE: routing invariants + the sort-based path vs a dense-einsum oracle."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.models import schema as S
+from repro.models.layers import norm
+from repro.models.moe import _router, moe_local
+
+
+def _cfg(e=4, k=2):
+    base = get_config("grok-1-314b").reduced()
+    return dataclasses.replace(base, n_experts=e, top_k=k)
+
+
+def _dense_oracle(cfg, p, x):
+    """Compute every expert for every token; combine with router weights."""
+    h = norm(cfg, p, x)
+    B, S_, D = h.shape
+    hf = h.reshape(B * S_, D)
+    top_p, top_i, aux = _router(cfg, p, hf)
+    up = jnp.einsum("td,edf->tef", hf, p["we_up"])
+    if "we_gate" in p:
+        up = jax.nn.silu(jnp.einsum("td,edf->tef", hf, p["we_gate"])) * up
+    else:
+        up = jax.nn.gelu(up)
+    out_all = jnp.einsum("tef,efd->ted", up, p["we_down"])
+    y = jnp.zeros_like(hf)
+    for j in range(cfg.top_k):
+        w = top_p[:, j][:, None]
+        sel = jnp.take_along_axis(out_all, top_i[:, j][:, None, None]
+                                  .repeat(1, 1), axis=1)[:, 0]
+        y = y + w * sel
+    return x + y.reshape(B, S_, D), aux
+
+
+@pytest.mark.parametrize("e,k", [(4, 2), (3, 1), (4, 4)])
+def test_moe_local_matches_dense_oracle(e, k):
+    cfg = _cfg(e, k)
+    sch = S.model_schema(cfg)["dec"]["b0_moe"]
+    p = {name: S._init_leaf(
+        dataclasses.replace(d, shape=d.shape[1:]),
+        jax.random.fold_in(jax.random.PRNGKey(0), i), jnp.float32)
+        for i, (name, d) in enumerate(sch.items())}
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, cfg.d_model))
+    y1, a1 = moe_local(cfg, p, x)
+    y2, a2 = _dense_oracle(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(float(a1), float(a2), rtol=1e-5)
+
+
+def test_router_normalizes_topk_and_aux_positive():
+    cfg = _cfg(4, 2)
+    p = {"router": jax.random.normal(jax.random.PRNGKey(0),
+                                     (cfg.d_model, 4))}
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, cfg.d_model))
+    top_p, top_i, aux = _router(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(top_p.sum(-1)), 1.0, rtol=1e-5)
+    assert float(aux) > 0
+    assert int(top_i.max()) < 4
+
+
+@given(tokens=st.integers(4, 64), e=st.sampled_from([2, 4]),
+       k=st.sampled_from([1, 2]))
+@settings(max_examples=10, deadline=None)
+def test_moe_local_shape_and_finite(tokens, e, k):
+    cfg = _cfg(e, k)
+    sch = S.model_schema(cfg)["dec"]["b0_moe"]
+    p = {name: S._init_leaf(
+        dataclasses.replace(d, shape=d.shape[1:]),
+        jax.random.fold_in(jax.random.PRNGKey(2), i), jnp.float32)
+        for i, (name, d) in enumerate(sch.items())}
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, tokens, cfg.d_model))
+    y, aux = moe_local(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()

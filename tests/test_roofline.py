@@ -1,0 +1,71 @@
+"""Roofline analysis: HLO collective parsing, ring factors, term math."""
+import pytest
+
+from repro.roofline import hw
+from repro.roofline.analysis import (Roofline, _factor, _group_size,
+                                     _shape_bytes, collective_bytes,
+                                     model_flops_estimate)
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config
+
+HLO = """
+  %all-reduce.2 = f32[128,64]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add
+  %all-gather.1 = bf16[256,32]{1,0} all-gather(%p), channel_id=2, replica_groups=[4,2]<=[8], dimensions={0}
+  %all-to-all.3 = f32[16,16]{1,0} all-to-all(%x), channel_id=3, replica_groups=[2,4]<=[8]
+  %collective-permute.1 = bf16[8,8]{1,0} collective-permute(%y), channel_id=4
+  %ar-start = f32[10]{0} all-reduce-start(%z), channel_id=5, replica_groups=[1,8]<=[8]
+  %ar-done = f32[10]{0} all-reduce-done(%ar-start)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,64]{1,0}") == 128 * 64 * 4
+    assert _shape_bytes("bf16[256,32]") == 256 * 32 * 2
+    assert _shape_bytes("(f32[4], bf16[8])") == 16 + 16
+
+
+def test_ring_factors():
+    assert _factor("all-reduce", 4) == pytest.approx(1.5)
+    assert _factor("all-gather", 4) == pytest.approx(0.75)
+    assert _factor("all-to-all", 2) == pytest.approx(0.5)
+    assert _factor("collective-permute", 2) == 1.0
+    assert _factor("all-reduce", 1) == 0.0
+
+
+def test_collective_parse_counts_and_async_dedup():
+    stats = collective_bytes(HLO)
+    assert stats.counts == {"all-reduce": 2, "all-gather": 1,
+                            "all-to-all": 1, "collective-permute": 1}
+    # all-reduce.2: 32768 f32 over groups of 4 -> 128*64*4 * 1.5
+    assert stats.bytes_by_op["all-reduce"] == pytest.approx(
+        128 * 64 * 4 * 1.5 + 10 * 4 * 2 * 7 / 8)
+    assert stats.bytes_by_op["all-gather"] == pytest.approx(
+        256 * 32 * 2 * 0.5)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="x", shape="train_4k", mesh="single", chips=256,
+                 hlo_flops=197e12, hlo_bytes=819e9 * 2,
+                 coll_bytes=50e9 * 0.5, model_flops=197e12 * 256,
+                 peak_bytes_per_device=8e9, coll_counts={})
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.useful_flops_ratio == pytest.approx(1.0)
+    assert r.fits_hbm
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("yi-9b")
+    tr = model_flops_estimate(cfg, INPUT_SHAPES["train_4k"])
+    de = model_flops_estimate(cfg, INPUT_SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert tr == pytest.approx(6 * n * 4096 * 256)
+    assert de == pytest.approx(2 * n * 128)
+
+
+def test_moe_uses_active_params():
+    kimi = get_config("kimi-k2-1t-a32b")
+    tr = model_flops_estimate(kimi, INPUT_SHAPES["train_4k"])
+    assert tr < 6 * kimi.param_count() * 4096 * 256 * 0.1  # 32B of 1T active
