@@ -204,3 +204,33 @@ def bench_beyond_paper_policies():
         rows.append((f"beyond/{name}/dist_to_optimum", float(np.mean(bests)),
                      f"alpha={np.mean(alphas):.3f}"))
     return rows
+
+
+def bench_backend_overhead():
+    """Distributed-service tax: the same HyperTrick search on in-process
+    threads vs OS-process workers over TCP (protocol + lease + journal-less
+    server path). Reports wall time per backend and the protocol's share of
+    a phase."""
+    from repro.core.executor import ProcessCluster, ThreadCluster
+    from repro.core.hypertrick import HyperTrick
+    from repro.core.search_space import LogUniform, SearchSpace
+    from repro.distributed.worker import make_synthetic_objective
+
+    space = SearchSpace({"x": LogUniform(0.01, 100.0)})
+    sleep = 0.05
+    mk = lambda: HyperTrick(space, 8, 3, 0.25, seed=0)
+
+    t_res = ThreadCluster(2, make_synthetic_objective(sleep=sleep)).run(mk())
+    p_res = ProcessCluster(2, {"kind": "synthetic", "sleep": sleep},
+                           lease_ttl=10.0, heartbeat_interval=0.5).run(mk())
+    ts, ps = t_res.summary(), p_res.summary()
+    rows = [
+        ("backend/thread/wall", ts["wall_time"], f"alpha={ts['alpha']}"),
+        ("backend/process/wall", ps["wall_time"],
+         f"alpha={ps['alpha']} (includes 2x interpreter spawn)"),
+        ("backend/process_over_thread",
+         ps["wall_time"] / max(ts["wall_time"], 1e-9),
+         f"phase_cost={sleep}s"),
+    ]
+    assert ts["n_trials"] == ps["n_trials"] == 8
+    return rows

@@ -28,6 +28,7 @@ def _suites(fast: bool):
             ("ga3c_throughput", sb.bench_ga3c_throughput),
             ("lm_train_step", sb.bench_lm_train_step),
             ("metaopt_rl_real", mb.bench_metaopt_rl_real),
+            ("backend_overhead", mb.bench_backend_overhead),  # distributed
         ]
     return suites
 

@@ -7,18 +7,25 @@
   objectives: phase barriers; "preemption" is trivially the in-process
   trainer state being kept while the worker is paused (which is exactly the
   support HyperTrick does not need).
+* ProcessCluster — real OS-process workers talking to an in-launcher TCP
+  server (``repro.distributed``): the paper's actual deployment shape, with
+  per-trial leases, crash reclamation, and an optional durable journal.
 
 Objectives have the signature  objective(hparams, phase, state) ->
 (metric, state)  where state carries the live trainer across phases.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import threading
 import time
 import traceback
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core.completion import Bracket
 from repro.core.service import (AsyncPolicy, Decision, OptimizationService,
@@ -94,6 +101,87 @@ class ThreadCluster:
         with ThreadPoolExecutor(self.n_nodes) as pool:
             list(pool.map(node_loop, range(self.n_nodes)))
         return ExecResult(svc, records, time.monotonic() - t0, self.n_nodes)
+
+
+class ProcessCluster:
+    """Workers are real OS processes speaking the distributed protocol to a
+    TCP server hosted by this launcher. ``objective_spec`` is a JSON-able
+    dict resolved by ``repro.distributed.worker.resolve_objective`` on the
+    worker side (e.g. ``{"kind": "rl", "game": "pong"}``), since closures
+    do not cross process boundaries.
+
+    With ``journal_path`` set, every event is WAL-logged; ``resume=True``
+    replays an existing journal first, so a restarted search continues with
+    the same trial records (orphaned RUNNING trials are reclaimed).
+    """
+
+    def __init__(self, n_nodes: int, objective_spec: Dict,
+                 lease_ttl: float = 15.0, heartbeat_interval: float = 1.0,
+                 journal_path: Optional[str] = None, resume: bool = False,
+                 host: str = "127.0.0.1", port: int = 0):
+        self.n_nodes = n_nodes
+        self.objective_spec = dict(objective_spec)
+        self.lease_ttl = lease_ttl
+        self.heartbeat_interval = heartbeat_interval
+        self.journal_path = journal_path
+        self.resume = resume
+        self.host = host
+        self.port = port
+
+    def _worker_cmd(self, port: int, node: int) -> List[str]:
+        return [sys.executable, "-m", "repro.distributed.worker",
+                "--host", self.host, "--port", str(port),
+                "--spec", json.dumps(self.objective_spec),
+                "--node", str(node),
+                "--heartbeat-interval", str(self.heartbeat_interval)]
+
+    def spawn_workers(self, port: int) -> List[subprocess.Popen]:
+        """Launch one worker process per node against a running server."""
+        import repro
+        # namespace package: locate the src dir from __path__, not __file__
+        src_dir = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src_dir + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        return [subprocess.Popen(self._worker_cmd(port, i), env=env)
+                for i in range(self.n_nodes)]
+
+    def run(self, policy: AsyncPolicy) -> ExecResult:
+        from repro.distributed.journal import Journal, replay_journal
+        from repro.distributed.server import MetaoptServer
+
+        svc = OptimizationService(policy)
+        journal = None
+        if self.journal_path:
+            if not self.resume and os.path.exists(self.journal_path):
+                # a fresh (non-resume) search must not append to a previous
+                # run's journal: trial ids would collide on a later --resume
+                os.remove(self.journal_path)
+            journal = Journal(self.journal_path)
+            if self.resume:
+                replay_journal(self.journal_path, svc, journal=journal)
+
+        server = MetaoptServer(svc, self.host, self.port,
+                               lease_ttl=self.lease_ttl, journal=journal)
+        server.start()
+        t0 = time.monotonic()
+        try:
+            procs = self.spawn_workers(server.port)
+            rcs = [p.wait() for p in procs]
+            wall = time.monotonic() - t0
+        finally:
+            server.stop()
+            if journal is not None:
+                journal.close()
+        if not server.report_log and all(rc != 0 for rc in rcs):
+            raise RuntimeError(
+                f"all {self.n_nodes} workers failed (exit codes {rcs}) "
+                "before reporting anything — check the objective spec and "
+                "worker environment")
+        records = [ExecRecord(tid, node if node is not None else -1, phase,
+                              ts, te, metric)
+                   for tid, node, phase, ts, te, metric in server.report_log]
+        return ExecResult(svc, records, wall, self.n_nodes)
 
 
 class SyncCluster:

@@ -32,7 +32,18 @@ def dcm_threshold(w0: int, r: float, p: int) -> float:
     return w0 * (1 - math.sqrt(r)) * (1 - r) ** p
 
 
-class HyperTrick(AsyncPolicy):
+class BudgetedPolicy(AsyncPolicy):
+    """Shared accounting for policies that launch a fixed number of
+    configurations tracked in ``_launched``."""
+
+    _launched: int = 0
+
+    def note_replayed_trial(self, hparams, requeued: bool = False):
+        if not requeued:
+            self._launched += 1
+
+
+class HyperTrick(BudgetedPolicy):
     def __init__(self, space: SearchSpace, w0: int, n_phases: int,
                  eviction_rate: float, seed: int = 0,
                  configs: Optional[list] = None):
@@ -69,7 +80,7 @@ class HyperTrick(AsyncPolicy):
         return Decision.STOP if metric < cut else Decision.CONTINUE
 
 
-class RandomSearchPolicy(AsyncPolicy):
+class RandomSearchPolicy(BudgetedPolicy):
     """Parallel random search, no early stopping (alpha = 100%)."""
 
     def __init__(self, space: SearchSpace, n_trials: int, n_phases: int,
@@ -79,6 +90,11 @@ class RandomSearchPolicy(AsyncPolicy):
         self.n_phases = n_phases
         self.rng = np.random.default_rng(seed)
         self._configs = list(configs) if configs is not None else None
+        if self._configs is not None:
+            assert len(self._configs) == n_trials, (
+                f"got {len(self._configs)} configs for {n_trials} trials — "
+                "same-configs comparisons (§5.2.4) require exactly one "
+                "config per trial")
         self._launched = 0
 
     def next_hparams(self):

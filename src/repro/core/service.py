@@ -11,8 +11,9 @@ from __future__ import annotations
 import enum
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional
 
 
 class Decision(enum.Enum):
@@ -33,6 +34,8 @@ class TrialRecord:
     hparams: Dict[str, Any]
     status: TrialStatus = TrialStatus.RUNNING
     node: Optional[int] = None
+    # config re-issued after a reclaimed lease (did not consume policy budget)
+    requeued: bool = False
     # per-phase: (metric, wall_time_reported)
     reports: List[tuple] = field(default_factory=list)
     start_time: float = 0.0
@@ -92,10 +95,41 @@ class KnowledgeDB:
 
     def best_trial(self) -> Optional[TrialRecord]:
         with self._lock:
-            done = [t for t in self.trials.values() if t.reports]
+            # crashed trials never count: their metrics come from a worker
+            # that subsequently failed, so they are not selectable outcomes
+            done = [t for t in self.trials.values()
+                    if t.reports and t.status is not TrialStatus.CRASHED]
             if not done:
                 return None
             return max(done, key=lambda t: t.best_metric)
+
+    def replay(self, events: Iterable[dict]) -> int:
+        """Apply journaled acquire/report/status events (see
+        ``distributed.journal``) to rebuild the DB after a restart."""
+        with self._lock:
+            n = 0
+            for ev in events:
+                kind = ev.get("ev")
+                if kind == "acquire":
+                    rec = TrialRecord(ev["trial_id"], ev["hparams"],
+                                      node=ev.get("node"),
+                                      requeued=ev.get("requeued", False),
+                                      start_time=ev.get("t") or 0.0)
+                    self.trials[rec.trial_id] = rec
+                elif kind == "report":
+                    rec = self.trials[ev["trial_id"]]
+                    self.phase_metrics.setdefault(
+                        ev["phase"], []).append(ev["metric"])
+                    rec.reports.append((ev["metric"], ev.get("t")))
+                elif kind == "status":
+                    rec = self.trials[ev["trial_id"]]
+                    rec.status = TrialStatus(ev["status"])
+                    if rec.status is not TrialStatus.RUNNING:
+                        rec.end_time = ev.get("t")
+                else:
+                    continue
+                n += 1
+            return n
 
     def completion_rate(self, n_phases: int) -> float:
         """Measured worker completion rate alpha (paper §5.2.3)."""
@@ -134,6 +168,11 @@ class AsyncPolicy:
                   prior_reports: int) -> Decision:
         raise NotImplementedError
 
+    def note_replayed_trial(self, hparams: Dict[str, Any],
+                            requeued: bool = False):
+        """A trial issued by a previous incarnation of the service (journal
+        replay). Budget-accounting subclasses override this."""
+
 
 class OptimizationService:
     """Thread-safe facade the workers talk to (report / acquire / query)."""
@@ -145,13 +184,26 @@ class OptimizationService:
         self.clock = clock
         self._lock = threading.RLock()
         self._next_id = 0
+        # configs reclaimed from dead workers, re-issued before new draws
+        self._requeue: deque = deque()
+
+    def requeue(self, hparams: Dict[str, Any]):
+        """Re-issue a configuration whose worker died (lease expired): the
+        budget slot goes back to the pool without charging the policy."""
+        with self._lock:
+            self._requeue.append(hparams)
 
     def acquire_trial(self, node: Optional[int] = None) -> Optional[TrialRecord]:
         with self._lock:
-            hp = self.policy.next_hparams()
+            requeued = False
+            if self._requeue:
+                hp = self._requeue.popleft()
+                requeued = True
+            else:
+                hp = self.policy.next_hparams()
             if hp is None:
                 return None
-            rec = TrialRecord(self._next_id, hp, node=node,
+            rec = TrialRecord(self._next_id, hp, node=node, requeued=requeued,
                               start_time=self.clock())
             self._next_id += 1
             self.db.add_trial(rec)
@@ -173,3 +225,33 @@ class OptimizationService:
         """Worker failure: strictly local effect (paper §3.2)."""
         with self._lock:
             self.db.set_status(trial_id, TrialStatus.CRASHED, self.clock())
+
+    def replay(self, events: List[dict],
+               reclaim_running: bool = True) -> List[TrialRecord]:
+        """Rebuild full service state (db, id counter, policy budget
+        accounting, requeue queue) from journaled events — the service-level
+        counterpart of ``KnowledgeDB.replay``. Returns the records that were
+        RUNNING at death and got reclaimed (marked CRASHED + requeued)."""
+        self.db.replay(events)
+        pending = []              # requeued hparams not yet re-acquired
+        for ev in events:
+            kind = ev.get("ev")
+            if kind == "requeue":
+                pending.append(ev["hparams"])
+            elif kind == "acquire":
+                if ev.get("requeued") and ev["hparams"] in pending:
+                    pending.remove(ev["hparams"])
+                self.policy.note_replayed_trial(ev["hparams"],
+                                                ev.get("requeued", False))
+        reclaimed: List[TrialRecord] = []
+        with self._lock:
+            ids = [ev["trial_id"] for ev in events if "trial_id" in ev]
+            self._next_id = max(self._next_id, max(ids, default=-1) + 1)
+            self._requeue.extend(pending)
+            if reclaim_running:
+                for rec in self.db.trials.values():
+                    if rec.status is TrialStatus.RUNNING:
+                        rec.status = TrialStatus.CRASHED
+                        self._requeue.append(rec.hparams)
+                        reclaimed.append(rec)
+        return reclaimed

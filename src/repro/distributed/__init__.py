@@ -1,0 +1,22 @@
+"""Distributed metaoptimization service (paper §3.1–3.2 over real sockets).
+
+The in-process ``OptimizationService`` becomes a client–server system:
+
+* ``protocol``  — length-prefixed JSON wire format with typed messages.
+* ``server``    — threaded TCP server with per-trial leases and a reaper
+                  thread (worker failure has strictly local effect).
+* ``journal``   — durable append-only write-ahead log + replay, so a
+                  restarted server resumes the search where it died.
+* ``client``    — the SDK workers use to talk to the server.
+* ``worker``    — the worker-agent entrypoint
+                  (``python -m repro.distributed.worker``).
+"""
+from repro.distributed.client import (Pending, RemoteTrial, ServiceClient,
+                                      ServiceError)
+from repro.distributed.journal import Journal, read_events, replay_journal
+from repro.distributed.server import MetaoptServer
+
+__all__ = [
+    "Journal", "MetaoptServer", "Pending", "RemoteTrial", "ServiceClient",
+    "ServiceError", "read_events", "replay_journal",
+]

@@ -1,0 +1,90 @@
+"""Client SDK for the metaoptimization server.
+
+One persistent socket per client; calls are serialized by a lock so a
+background heartbeat thread can share the connection with the main
+acquire/report loop.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+from repro.distributed import protocol as proto
+
+
+class ServiceError(RuntimeError):
+    """The server rejected a request (stale trial, bad phase order, ...)."""
+
+
+@dataclass
+class RemoteTrial:
+    trial_id: int
+    hparams: Dict[str, Any]
+    n_phases: int
+
+
+@dataclass
+class Pending:
+    """Budget spent but live leases remain — poll acquire again later."""
+    retry_after: float
+
+
+class ServiceClient:
+    def __init__(self, host: str, port: int, timeout: float = 60.0):
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._sock.settimeout(timeout)
+        self._lock = threading.Lock()
+
+    def _call(self, msg):
+        with self._lock:
+            proto.send_message(self._sock, msg)
+            resp = proto.recv_message(self._sock)
+        if resp is None:
+            raise proto.ProtocolError("server closed the connection")
+        if isinstance(resp, proto.ErrorResponse):
+            raise ServiceError(resp.error)
+        return resp
+
+    # -- verbs --------------------------------------------------------------
+    def acquire(self, node: Optional[int] = None):
+        """A RemoteTrial, a Pending marker (retry later), or None (done)."""
+        resp = self._call(proto.AcquireRequest(node=node))
+        if resp.trial_id is None:
+            if resp.retry_after is not None:
+                return Pending(resp.retry_after)
+            return None
+        return RemoteTrial(resp.trial_id, resp.hparams, resp.n_phases)
+
+    def report(self, trial_id: int, phase: int, metric: float,
+               t_start: float = 0.0, t_end: float = 0.0,
+               node: Optional[int] = None) -> str:
+        resp = self._call(proto.ReportRequest(
+            trial_id=trial_id, phase=phase, metric=float(metric),
+            t_start=t_start, t_end=t_end, node=node))
+        return resp.decision
+
+    def heartbeat(self, trial_id: int) -> bool:
+        return self._call(proto.HeartbeatRequest(trial_id=trial_id)).ok
+
+    def crash(self, trial_id: int, reason: str = "") -> None:
+        self._call(proto.CrashRequest(trial_id=trial_id, reason=reason))
+
+    def summary(self) -> dict:
+        return self._call(proto.SummaryRequest()).summary
+
+    def shutdown(self) -> None:
+        self._call(proto.ShutdownRequest())
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -1,0 +1,88 @@
+"""Durable write-ahead journal for the metaoptimization knowledge DB.
+
+Every acquire / report / status / requeue event the server handles is
+appended as one JSON line *before* the response leaves the socket, so a
+restarted server can ``replay_journal`` the file and resume the search with
+the exact trial records it died with — the metaopt-state analogue of
+``checkpoint/checkpointer.py``. Trials that were RUNNING at crash time have
+lost their worker; replay marks them CRASHED and requeues their
+configuration so the search still completes (strictly local effect, §3.2).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Iterator, List, Optional
+
+from repro.core.service import OptimizationService, TrialStatus
+from repro.distributed.protocol import json_default
+
+
+class Journal:
+    """Append-only JSONL event log (thread-safe, flushed per event)."""
+
+    def __init__(self, path: str, fsync: bool = False):
+        self.path = path
+        self._fsync = fsync
+        self._lock = threading.Lock()
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "a", encoding="utf-8")
+
+    def append(self, event: dict) -> None:
+        line = json.dumps(event, sort_keys=True, default=json_default)
+        with self._lock:
+            self._f.write(line + "\n")
+            self._f.flush()
+            if self._fsync:
+                os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._f.closed:
+                self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def read_events(path: str) -> Iterator[dict]:
+    """Yield journal events; a torn final line (crash mid-write) is skipped."""
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                yield json.loads(line)
+            except json.JSONDecodeError:
+                continue
+
+
+def replay_journal(path: str, service: OptimizationService,
+                   journal: Optional[Journal] = None,
+                   reclaim_running: bool = True) -> int:
+    """Rebuild ``service`` (db + id counter + policy budget accounting +
+    requeue queue) from the journal at ``path``. Returns the number of
+    events applied; 0 if the file does not exist.
+
+    If ``journal`` is given, the reclamation of orphaned RUNNING trials is
+    itself journaled, so a second restart replays identically.
+    """
+    if not os.path.exists(path):
+        return 0
+    events: List[dict] = list(read_events(path))
+    if not events:
+        return 0
+    reclaimed = service.replay(events, reclaim_running=reclaim_running)
+    if journal is not None:
+        for rec in reclaimed:
+            journal.append({"ev": "status", "trial_id": rec.trial_id,
+                            "status": TrialStatus.CRASHED.value, "t": None})
+            journal.append({"ev": "requeue", "hparams": rec.hparams})
+    return len(events)

@@ -1,0 +1,183 @@
+"""Wire protocol for the metaoptimization service.
+
+Framing: a 4-byte big-endian unsigned length followed by a UTF-8 JSON
+payload. Every payload carries a ``type`` tag that maps to one of the typed
+message dataclasses below — the same acquire / report / heartbeat / crash /
+summary / shutdown verbs the in-process ``OptimizationService`` exposes,
+made explicit so any transport (or language) can speak them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import socket
+import struct
+from typing import Any, Dict, Optional
+
+MAX_MESSAGE_BYTES = 16 << 20          # sanity bound on a single frame
+_HEADER = struct.Struct(">I")
+
+
+class ProtocolError(RuntimeError):
+    """Malformed frame, unknown message type, or mid-message EOF."""
+
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def message(type_name: str):
+    """Register a dataclass as a wire message with the given type tag."""
+    def wrap(cls):
+        cls = dataclasses.dataclass(cls)
+        cls.TYPE = type_name
+        _REGISTRY[type_name] = cls
+        return cls
+    return wrap
+
+
+# -- requests ---------------------------------------------------------------
+@message("acquire")
+class AcquireRequest:
+    node: Optional[int] = None
+
+
+@message("report")
+class ReportRequest:
+    trial_id: int
+    phase: int
+    metric: float
+    t_start: float = 0.0              # worker-side wall-clock offsets
+    t_end: float = 0.0
+    node: Optional[int] = None
+
+
+@message("heartbeat")
+class HeartbeatRequest:
+    trial_id: int
+
+
+@message("crash")
+class CrashRequest:
+    trial_id: int
+    reason: str = ""
+
+
+@message("summary")
+class SummaryRequest:
+    pass
+
+
+@message("shutdown")
+class ShutdownRequest:
+    pass
+
+
+# -- responses --------------------------------------------------------------
+@message("acquire_ok")
+class AcquireResponse:
+    trial_id: Optional[int]           # None -> search budget spent
+    hparams: Optional[Dict[str, Any]]
+    n_phases: int = 1
+    # budget spent but leases outstanding: a reclaimed config may still be
+    # requeued — poll again after this many seconds instead of exiting
+    retry_after: Optional[float] = None
+
+
+@message("report_ok")
+class ReportResponse:
+    decision: str                     # "continue" | "stop"
+
+
+@message("heartbeat_ok")
+class HeartbeatResponse:
+    ok: bool = True                   # False -> lease lost, abandon trial
+
+
+@message("crash_ok")
+class CrashResponse:
+    ok: bool = True
+
+
+@message("summary_ok")
+class SummaryResponse:
+    summary: Dict[str, Any]
+
+
+@message("shutdown_ok")
+class ShutdownResponse:
+    ok: bool = True
+
+
+@message("error")
+class ErrorResponse:
+    error: str
+
+
+# -- framing ----------------------------------------------------------------
+def json_default(obj):
+    """Narrow non-native values (numpy scalars) instead of stringifying
+    everything: a truly unserializable hparam should fail loudly at send
+    time, not reach the worker as a string."""
+    item = getattr(obj, "item", None)
+    if callable(item):
+        return item()
+    raise TypeError(
+        f"unserializable value in message: {obj!r} ({type(obj).__name__})")
+
+
+def encode(msg) -> bytes:
+    payload = dataclasses.asdict(msg)
+    payload["type"] = msg.TYPE
+    data = json.dumps(payload, sort_keys=True,
+                      default=json_default).encode("utf-8")
+    if len(data) > MAX_MESSAGE_BYTES:
+        raise ProtocolError(f"message too large: {len(data)} bytes")
+    return _HEADER.pack(len(data)) + data
+
+
+def decode(data: bytes):
+    try:
+        obj = json.loads(data.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ProtocolError(f"bad payload: {e}") from e
+    if not isinstance(obj, dict) or "type" not in obj:
+        raise ProtocolError("payload missing type tag")
+    type_name = obj.pop("type")
+    cls = _REGISTRY.get(type_name)
+    if cls is None:
+        raise ProtocolError(f"unknown message type {type_name!r}")
+    try:
+        return cls(**obj)
+    except TypeError as e:
+        raise ProtocolError(f"bad fields for {type_name!r}: {e}") from e
+
+
+def send_message(sock: socket.socket, msg) -> None:
+    sock.sendall(encode(msg))
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    """Read exactly n bytes; None on clean EOF at a frame boundary."""
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            if buf:
+                raise ProtocolError("connection closed mid-message")
+            return None
+        buf += chunk
+    return buf
+
+
+def recv_message(sock: socket.socket):
+    """Next message from the socket, or None on clean EOF."""
+    header = _recv_exact(sock, _HEADER.size)
+    if header is None:
+        return None
+    (length,) = _HEADER.unpack(header)
+    if length > MAX_MESSAGE_BYTES:
+        raise ProtocolError(f"frame too large: {length} bytes")
+    payload = _recv_exact(sock, length)
+    if payload is None:
+        raise ProtocolError("connection closed before payload")
+    return decode(payload)

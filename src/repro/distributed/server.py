@@ -1,0 +1,214 @@
+"""Fault-tolerant TCP server wrapping ``OptimizationService``.
+
+One handler thread per connection speaks the ``protocol`` verbs; a reaper
+thread enforces per-trial *leases*: every acquire grants a lease of
+``lease_ttl`` seconds, renewed by heartbeats and reports. When a worker
+dies silently its lease expires, the trial is marked CRASHED (strictly
+local effect, paper §3.2) and its configuration is requeued so the node's
+budget slot is re-issued and the search never stalls. All state changes are
+written to the optional ``Journal`` before the response is sent.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.service import OptimizationService, TrialStatus
+from repro.distributed import protocol as proto
+from repro.distributed.journal import Journal
+
+
+class MetaoptServer:
+    def __init__(self, service: OptimizationService, host: str = "127.0.0.1",
+                 port: int = 0, lease_ttl: float = 15.0,
+                 journal: Optional[Journal] = None, clock=time.monotonic):
+        self.service = service
+        self.lease_ttl = lease_ttl
+        self.journal = journal
+        self.clock = clock
+        self._leases: Dict[int, float] = {}          # trial_id -> expiry
+        self._lease_lock = threading.Lock()
+        # (trial_id, node, phase, t_start, t_end, metric) per report, so the
+        # launcher can rebuild ExecRecords for occupancy accounting
+        self.report_log: List[Tuple] = []
+        self._log_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._conns: List[socket.socket] = []
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(128)
+        self.host, self.port = self._listener.getsockname()[:2]
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "MetaoptServer":
+        self._listener.settimeout(0.2)
+        for target in (self._accept_loop, self._reaper_loop):
+            t = threading.Thread(target=target, daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        for conn in list(self._conns):
+            try:
+                conn.close()
+            except OSError:
+                pass
+        for t in self._threads:
+            t.join(timeout=2.0)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -- accept / handle ----------------------------------------------------
+    def _accept_loop(self):
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            self._conns.append(conn)
+            t = threading.Thread(target=self._handle, args=(conn,),
+                                 daemon=True)
+            t.start()
+
+    def _handle(self, conn: socket.socket):
+        try:
+            while not self._stop.is_set():
+                msg = proto.recv_message(conn)
+                if msg is None:
+                    break
+                try:
+                    resp = self._dispatch(msg)
+                except Exception as e:  # noqa: BLE001 — fault isolation
+                    resp = proto.ErrorResponse(f"{type(e).__name__}: {e}")
+                proto.send_message(conn, resp)
+                if isinstance(msg, proto.ShutdownRequest):
+                    threading.Thread(target=self.stop, daemon=True).start()
+                    break
+        except (proto.ProtocolError, OSError):
+            pass
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+            if conn in self._conns:
+                self._conns.remove(conn)
+
+    # -- verbs --------------------------------------------------------------
+    def _dispatch(self, msg):
+        if isinstance(msg, proto.AcquireRequest):
+            return self._do_acquire(msg)
+        if isinstance(msg, proto.ReportRequest):
+            return self._do_report(msg)
+        if isinstance(msg, proto.HeartbeatRequest):
+            with self._lease_lock:
+                alive = msg.trial_id in self._leases
+                if alive:
+                    self._leases[msg.trial_id] = self.clock() + self.lease_ttl
+            return proto.HeartbeatResponse(ok=alive)
+        if isinstance(msg, proto.CrashRequest):
+            self.service.crash(msg.trial_id)
+            self._journal_status(msg.trial_id)
+            with self._lease_lock:
+                self._leases.pop(msg.trial_id, None)
+            return proto.CrashResponse()
+        if isinstance(msg, proto.SummaryRequest):
+            s = self.service.db.summary()
+            s["alpha"] = round(self.service.db.completion_rate(
+                self.service.policy.n_phases), 4)
+            return proto.SummaryResponse(summary=s)
+        if isinstance(msg, proto.ShutdownRequest):
+            return proto.ShutdownResponse()
+        raise proto.ProtocolError(f"unexpected message {msg.TYPE!r}")
+
+    def _do_acquire(self, msg: proto.AcquireRequest):
+        n_phases = self.service.policy.n_phases
+        # atomic with the reaper: either we get the requeued config of a
+        # just-reclaimed trial, or we still see its lease and tell the
+        # worker to retry — a dying worker's config can never be lost
+        with self._lease_lock:
+            rec = self.service.acquire_trial(msg.node)
+            if rec is None:
+                retry = (min(1.0, self.lease_ttl / 2)
+                         if self._leases else None)
+                return proto.AcquireResponse(None, None, n_phases,
+                                             retry_after=retry)
+            self._leases[rec.trial_id] = self.clock() + self.lease_ttl
+        self._journal({"ev": "acquire", "trial_id": rec.trial_id,
+                       "hparams": rec.hparams, "node": rec.node,
+                       "requeued": rec.requeued, "t": rec.start_time})
+        return proto.AcquireResponse(rec.trial_id, rec.hparams, n_phases)
+
+    def _do_report(self, msg: proto.ReportRequest):
+        rec = self.service.db.trials.get(msg.trial_id)
+        if rec is None:
+            return proto.ErrorResponse(f"unknown trial {msg.trial_id}")
+        # atomic with the reaper: a zombie whose lease was reclaimed gets
+        # "stop" and its metric is never recorded — the status check, the
+        # report, and the lease renewal cannot interleave with _reclaim
+        with self._lease_lock:
+            if rec.status is TrialStatus.CRASHED:
+                return proto.ReportResponse(decision="stop")
+            decision = self.service.report(msg.trial_id, msg.phase,
+                                           msg.metric)
+            if decision.value == "stop":
+                self._leases.pop(msg.trial_id, None)
+            else:
+                self._leases[msg.trial_id] = self.clock() + self.lease_ttl
+        self._journal({"ev": "report", "trial_id": msg.trial_id,
+                       "phase": msg.phase, "metric": msg.metric,
+                       "t": rec.reports[-1][1]})
+        if rec.status is not TrialStatus.RUNNING:
+            self._journal_status(msg.trial_id)
+        node = msg.node if msg.node is not None else rec.node
+        with self._log_lock:
+            self.report_log.append((msg.trial_id, node, msg.phase,
+                                    msg.t_start, msg.t_end, msg.metric))
+        return proto.ReportResponse(decision=decision.value)
+
+    # -- lease reaper -------------------------------------------------------
+    def _reaper_loop(self):
+        interval = max(min(self.lease_ttl / 4.0, 1.0), 0.05)
+        while not self._stop.wait(interval):
+            now = self.clock()
+            with self._lease_lock:
+                expired = [tid for tid, exp in self._leases.items()
+                           if exp < now]
+                for tid in expired:
+                    del self._leases[tid]
+                    self._reclaim(tid)   # crash+requeue atomic with acquire
+
+    def _reclaim(self, trial_id: int):
+        rec = self.service.db.trials.get(trial_id)
+        if rec is None or rec.status is not TrialStatus.RUNNING:
+            return
+        self.service.crash(trial_id)
+        self.service.requeue(rec.hparams)
+        self._journal_status(trial_id)
+        self._journal({"ev": "requeue", "hparams": rec.hparams})
+
+    # -- journal helpers ----------------------------------------------------
+    def _journal(self, event: dict):
+        if self.journal is not None:
+            self.journal.append(event)
+
+    def _journal_status(self, trial_id: int):
+        rec = self.service.db.trials[trial_id]
+        self._journal({"ev": "status", "trial_id": trial_id,
+                       "status": rec.status.value, "t": rec.end_time})

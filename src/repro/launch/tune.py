@@ -1,28 +1,50 @@
 """HyperTrick metaoptimization driver — the paper's technique as a
-first-class feature over ANY registered objective.
+first-class feature over ANY registered objective, on ANY backend.
 
-  # paper-faithful: tune GA3C on a mini-Atari game
+  # paper-faithful: tune GA3C on a mini-Atari game (in-process threads)
   PYTHONPATH=src python -m repro.launch.tune --objective rl --game pong \\
       --workers 12 --nodes 4 --phases 5 --eviction-rate 0.25
 
   # framework integration: tune LM training of a zoo architecture
   PYTHONPATH=src python -m repro.launch.tune --objective lm --arch yi-9b \\
       --workers 8 --nodes 2 --phases 4
+
+  # distributed: OS-process workers against a fault-tolerant TCP server
+  # with a durable journal (resume with --resume after a server death)
+  PYTHONPATH=src python -m repro.launch.tune --backend server \\
+      --objective synthetic --workers 8 --nodes 2 --phases 3 \\
+      --journal /tmp/metaopt_journal.jsonl
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-from repro.core.executor import ThreadCluster
+from repro.core.executor import ProcessCluster, ThreadCluster
 from repro.core.hypertrick import HyperTrick, RandomSearchPolicy
 from repro.core.completion import expected_alpha, min_alpha
-from repro.core.search_space import lm_space, paper_rl_space
+from repro.core.search_space import (LogUniform, SearchSpace, lm_space,
+                                     paper_rl_space)
+
+
+def synthetic_space() -> SearchSpace:
+    """Planted-optimum toy space for demos / backend smoke runs."""
+    return SearchSpace({"x": LogUniform(0.01, 100.0)})
+
+
+def build_objective_spec(args) -> dict:
+    """JSON-able spec resolved by repro.distributed.worker in each process."""
+    from repro.distributed.worker import build_spec
+    return build_spec(args.objective, game=args.game, arch=args.arch,
+                      episodes_per_phase=args.episodes_per_phase,
+                      steps_per_phase=args.steps_per_phase,
+                      seed=args.seed, synthetic_sleep=args.synthetic_sleep)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--objective", choices=["rl", "lm"], default="rl")
+    ap.add_argument("--objective", choices=["rl", "lm", "synthetic"],
+                    default="rl")
     ap.add_argument("--game", default="pong")
     ap.add_argument("--arch", default="yi-9b")
     ap.add_argument("--workers", type=int, default=12)     # W0
@@ -31,22 +53,32 @@ def main():
     ap.add_argument("--eviction-rate", type=float, default=0.25)
     ap.add_argument("--episodes-per-phase", type=int, default=60)
     ap.add_argument("--steps-per-phase", type=int, default=25)
+    ap.add_argument("--synthetic-sleep", type=float, default=0.05)
     ap.add_argument("--policy", choices=["hypertrick", "random"],
                     default="hypertrick")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=["thread", "process", "server"],
+                    default="thread",
+                    help="thread: in-process node threads; process: OS-"
+                         "process workers over TCP; server: process workers "
+                         "plus a durable journal (resumable)")
+    ap.add_argument("--journal", default=None,
+                    help="journal path (default for --backend server: "
+                         "metaopt_journal.jsonl; optional for process). "
+                         "A fresh run overwrites an existing journal; use "
+                         "--resume to replay it instead")
+    ap.add_argument("--resume", action="store_true",
+                    help="replay an existing journal before serving")
+    ap.add_argument("--lease-ttl", type=float, default=15.0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
     if args.objective == "rl":
-        from repro.rl.ga3c import make_rl_objective
         space = paper_rl_space()
-        objective = make_rl_objective(args.game, args.episodes_per_phase,
-                                      seed=args.seed)
-    else:
-        from repro.train.trainer import make_lm_objective
+    elif args.objective == "lm":
         space = lm_space()
-        objective = make_lm_objective(args.arch, args.steps_per_phase,
-                                      seed=args.seed)
+    else:
+        space = synthetic_space()
 
     if args.policy == "hypertrick":
         policy = HyperTrick(space, args.workers, args.phases,
@@ -55,7 +87,35 @@ def main():
         policy = RandomSearchPolicy(space, args.workers, args.phases,
                                     seed=args.seed)
 
-    cluster = ThreadCluster(args.nodes, objective)
+    if args.backend == "thread":
+        if args.resume or args.journal:
+            ap.error("--journal/--resume need a socket backend "
+                     "(--backend process or server)")
+        if args.objective == "rl":
+            from repro.rl.ga3c import make_rl_objective
+            objective = make_rl_objective(args.game, args.episodes_per_phase,
+                                          seed=args.seed)
+        elif args.objective == "lm":
+            from repro.train.trainer import make_lm_objective
+            objective = make_lm_objective(args.arch, args.steps_per_phase,
+                                          seed=args.seed)
+        else:
+            from repro.distributed.worker import make_synthetic_objective
+            objective = make_synthetic_objective(sleep=args.synthetic_sleep,
+                                                 seed=args.seed)
+        cluster = ThreadCluster(args.nodes, objective)
+    else:
+        journal_path = args.journal
+        if args.backend == "server" and journal_path is None:
+            journal_path = "metaopt_journal.jsonl"
+        if args.resume and journal_path is None:
+            ap.error("--resume requires a journal "
+                     "(--backend server or --journal PATH)")
+        cluster = ProcessCluster(args.nodes, build_objective_spec(args),
+                                 lease_ttl=args.lease_ttl,
+                                 journal_path=journal_path,
+                                 resume=args.resume)
+
     result = cluster.run(policy)
     summary = result.summary()
     summary["expected_alpha"] = expected_alpha(args.eviction_rate, args.phases)

@@ -1,0 +1,262 @@
+"""Distributed metaoptimization service: wire protocol round-trips, lease
+expiry reclamation, journal replay, and OS-process workers end-to-end."""
+import json
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.core.executor import ProcessCluster, ThreadCluster
+from repro.core.hypertrick import HyperTrick, RandomSearchPolicy
+from repro.core.search_space import LogUniform, SearchSpace
+from repro.core.service import OptimizationService, TrialStatus
+from repro.distributed import protocol as proto
+from repro.distributed.client import Pending, ServiceClient
+from repro.distributed.journal import Journal, read_events, replay_journal
+from repro.distributed.server import MetaoptServer
+from repro.distributed.worker import (WorkerAgent, make_synthetic_objective,
+                                      resolve_objective)
+
+
+def _space():
+    return SearchSpace({"x": LogUniform(0.01, 100.0)})
+
+
+def _wait_until(cond, deadline=10.0, step=0.02):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < deadline:
+        if cond():
+            return True
+        time.sleep(step)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# protocol
+# ---------------------------------------------------------------------------
+def test_protocol_roundtrip_all_messages():
+    msgs = [
+        proto.AcquireRequest(node=3),
+        proto.AcquireResponse(7, {"lr": 1e-3, "t_max": 20}, n_phases=5),
+        proto.AcquireResponse(None, None, 5, retry_after=0.5),
+        proto.ReportRequest(7, 2, -1.25, t_start=0.1, t_end=0.9, node=3),
+        proto.ReportResponse("continue"),
+        proto.HeartbeatRequest(7),
+        proto.HeartbeatResponse(ok=False),
+        proto.CrashRequest(7, reason="boom"),
+        proto.CrashResponse(),
+        proto.SummaryRequest(),
+        proto.SummaryResponse({"n_trials": 4, "by_status": {"running": 4}}),
+        proto.ShutdownRequest(),
+        proto.ShutdownResponse(),
+        proto.ErrorResponse("unknown trial 99"),
+    ]
+    for msg in msgs:
+        frame = proto.encode(msg)
+        assert proto.decode(frame[4:]) == msg
+
+
+def test_protocol_framing_over_socketpair():
+    a, b = socket.socketpair()
+    sent = [proto.AcquireRequest(node=i) for i in range(5)]
+    for m in sent:
+        proto.send_message(a, m)
+    got = [proto.recv_message(b) for _ in sent]
+    assert got == sent
+    a.close()
+    assert proto.recv_message(b) is None        # clean EOF
+    b.close()
+
+
+def test_protocol_rejects_garbage():
+    with pytest.raises(proto.ProtocolError):
+        proto.decode(b"not json")
+    with pytest.raises(proto.ProtocolError):
+        proto.decode(json.dumps({"type": "no_such_verb"}).encode())
+    with pytest.raises(proto.ProtocolError):
+        proto.decode(json.dumps({"no": "type"}).encode())
+
+
+# ---------------------------------------------------------------------------
+# server end-to-end (in-process worker agents over real sockets)
+# ---------------------------------------------------------------------------
+def _run_agents(server, n_agents, objective, heartbeat_interval=0.1):
+    threads, clients = [], []
+    for i in range(n_agents):
+        c = ServiceClient(server.host, server.port)
+        clients.append(c)
+        agent = WorkerAgent(c, objective,
+                            heartbeat_interval=heartbeat_interval, node=i)
+        t = threading.Thread(target=agent.run)
+        t.start()
+        threads.append(t)
+    for t in threads:
+        t.join(timeout=30)
+    for c in clients:
+        c.close()
+
+
+def test_server_hypertrick_search_matches_thread_schema():
+    objective = make_synthetic_objective(sleep=0.001, seed=1)
+    policy = HyperTrick(_space(), w0=10, n_phases=3, eviction_rate=0.3,
+                        seed=0)
+    svc = OptimizationService(policy)
+    with MetaoptServer(svc, lease_ttl=10.0) as server:
+        _run_agents(server, 2, objective)
+        with ServiceClient(server.host, server.port) as c:
+            remote_summary = c.summary()
+    assert remote_summary["n_trials"] == 10
+    statuses = remote_summary["by_status"]
+    assert statuses.get("completed", 0) + statuses.get("killed", 0) == 10
+    assert 0 < remote_summary["alpha"] <= 1.0
+    # identical summary schema to the thread backend
+    thread_summary = ThreadCluster(2, objective).run(
+        HyperTrick(_space(), 10, 3, 0.3, seed=0)).summary()
+    for key in ("n_trials", "by_status", "best_metric", "best_hparams",
+                "alpha"):
+        assert key in remote_summary and key in thread_summary
+
+
+def test_lease_expiry_reclaims_and_requeues():
+    policy = RandomSearchPolicy(_space(), n_trials=2, n_phases=1, seed=0)
+    svc = OptimizationService(policy)
+    with MetaoptServer(svc, lease_ttl=0.3) as server:
+        dead = ServiceClient(server.host, server.port)
+        t_dead = dead.acquire(node=0)           # acquires, then "dies":
+        dead.close()                            # no heartbeat, no report
+        assert _wait_until(lambda: svc.db.trials[t_dead.trial_id].status
+                           is TrialStatus.CRASHED)
+        # the reclaimed config is re-issued to a healthy worker
+        with ServiceClient(server.host, server.port) as c:
+            first = c.acquire(node=1)
+            assert first.hparams == t_dead.hparams
+            assert c.report(first.trial_id, 0, 1.0) == "stop"
+            second = c.acquire(node=1)
+            assert second is not None and not isinstance(second, Pending)
+            assert c.report(second.trial_id, 0, 2.0) == "stop"
+            assert c.acquire(node=1) is None    # budget really spent
+            s = c.summary()
+    assert s["by_status"] == {"crashed": 1, "completed": 2}
+    assert s["n_trials"] == 3                   # crashed + 2 completed
+    assert s["alpha"] is not None               # alpha still reported
+    # crashed trials never win best-trial selection
+    assert svc.db.best_trial().status is TrialStatus.COMPLETED
+
+
+def test_heartbeat_keeps_lease_alive_and_late_report_is_stopped():
+    policy = RandomSearchPolicy(_space(), n_trials=1, n_phases=2, seed=0)
+    svc = OptimizationService(policy)
+    with MetaoptServer(svc, lease_ttl=0.4) as server:
+        with ServiceClient(server.host, server.port) as c:
+            trial = c.acquire(node=0)
+            for _ in range(6):                  # outlive several TTLs
+                time.sleep(0.15)
+                assert c.heartbeat(trial.trial_id)
+            assert svc.db.trials[trial.trial_id].status is TrialStatus.RUNNING
+            # now stop heartbeating: the reaper reclaims the lease
+            assert _wait_until(lambda: svc.db.trials[trial.trial_id].status
+                               is TrialStatus.CRASHED)
+            assert not c.heartbeat(trial.trial_id)
+            # a zombie's late report is answered with "stop", not recorded
+            assert c.report(trial.trial_id, 0, 123.0) == "stop"
+            assert svc.db.trials[trial.trial_id].reports == []
+
+
+def test_worker_crash_is_local_effect():
+    objective = make_synthetic_objective(crash_above=10.0)
+    configs = [{"x": 1.0}, {"x": 50.0}, {"x": 2.0}]
+    policy = RandomSearchPolicy(_space(), 3, 2, configs=configs)
+    svc = OptimizationService(policy)
+    with MetaoptServer(svc, lease_ttl=10.0) as server:
+        _run_agents(server, 2, objective)
+    by_x = {t.hparams["x"]: t.status for t in svc.db.trials.values()}
+    assert by_x[50.0] is TrialStatus.CRASHED
+    assert by_x[1.0] is TrialStatus.COMPLETED
+    assert by_x[2.0] is TrialStatus.COMPLETED
+
+
+# ---------------------------------------------------------------------------
+# journal replay
+# ---------------------------------------------------------------------------
+def test_journal_replay_resumes_mid_search(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    policy = RandomSearchPolicy(_space(), n_trials=4, n_phases=2, seed=3)
+    svc = OptimizationService(policy)
+    journal = Journal(path)
+    with MetaoptServer(svc, lease_ttl=30.0, journal=journal) as server:
+        with ServiceClient(server.host, server.port) as c:
+            done = c.acquire(node=0)            # completes both phases
+            assert c.report(done.trial_id, 0, 1.0) == "continue"
+            assert c.report(done.trial_id, 1, 1.5) == "stop"
+            partial = c.acquire(node=0)         # dies after phase 0
+            assert c.report(partial.trial_id, 0, 9.0) == "continue"
+            orphan = c.acquire(node=1)          # dies before reporting
+    journal.close()                             # server "crashed" here
+
+    policy2 = RandomSearchPolicy(_space(), n_trials=4, n_phases=2, seed=3)
+    svc2 = OptimizationService(policy2)
+    journal2 = Journal(path)
+    n = replay_journal(path, svc2, journal=journal2)
+    assert n >= 6                               # 3 acquires + 3 reports
+    # identical trial records for everything that was journaled
+    assert svc2.db.trials[done.trial_id].hparams == done.hparams
+    assert svc2.db.trials[done.trial_id].status is TrialStatus.COMPLETED
+    assert [m for m, _ in svc2.db.trials[done.trial_id].reports] == [1.0, 1.5]
+    assert [m for m, _ in svc2.db.trials[partial.trial_id].reports] == [9.0]
+    # orphaned RUNNING trials were reclaimed and requeued
+    assert svc2.db.trials[partial.trial_id].status is TrialStatus.CRASHED
+    assert svc2.db.trials[orphan.trial_id].status is TrialStatus.CRASHED
+    assert policy2._launched == 3               # replay restored the budget
+
+    # the resumed search runs to completion on the same journal
+    with MetaoptServer(svc2, lease_ttl=30.0, journal=journal2) as server2:
+        _run_agents(server2, 2, make_synthetic_objective())
+    journal2.close()
+    statuses = [t.status for t in svc2.db.trials.values()]
+    assert statuses.count(TrialStatus.COMPLETED) == 4   # full budget done
+    assert statuses.count(TrialStatus.CRASHED) == 2
+    # a second cold replay reconstructs the exact same final records
+    svc3 = OptimizationService(
+        RandomSearchPolicy(_space(), n_trials=4, n_phases=2, seed=3))
+    replay_journal(path, svc3)
+    assert {tid: (r.status, r.hparams, [m for m, _ in r.reports])
+            for tid, r in svc3.db.trials.items()} == \
+           {tid: (r.status, r.hparams, [m for m, _ in r.reports])
+            for tid, r in svc2.db.trials.items()}
+
+
+def test_journal_tolerates_torn_tail(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    with Journal(path) as j:
+        j.append({"ev": "acquire", "trial_id": 0, "hparams": {"x": 1.0},
+                  "node": 0, "t": 0.0})
+    with open(path, "a") as f:
+        f.write('{"ev": "report", "trial_id": 0, "pha')   # torn write
+    events = list(read_events(path))
+    assert len(events) == 1 and events[0]["ev"] == "acquire"
+
+
+# ---------------------------------------------------------------------------
+# OS-process workers (the acceptance scenario, scaled down)
+# ---------------------------------------------------------------------------
+def test_process_cluster_end_to_end():
+    policy = RandomSearchPolicy(_space(), n_trials=4, n_phases=2, seed=0)
+    cluster = ProcessCluster(2, {"kind": "synthetic", "sleep": 0.01},
+                             lease_ttl=10.0, heartbeat_interval=0.2)
+    res = cluster.run(policy)
+    s = res.summary()
+    assert s["n_trials"] == 4
+    assert s["by_status"] == {"completed": 4}
+    assert s["alpha"] == pytest.approx(1.0)
+    assert len(res.records) == 8                # 4 trials x 2 phases
+    assert {"n_trials", "by_status", "best_metric", "best_hparams",
+            "wall_time", "occupancy", "alpha"} <= set(s)
+
+
+def test_resolve_objective_specs():
+    obj = resolve_objective({"kind": "synthetic", "sleep": 0.0})
+    metric, state = obj({"x": 1.0}, 0, None)
+    assert metric == pytest.approx(0.0)
+    with pytest.raises(ValueError):
+        resolve_objective({"kind": "no_such"})

@@ -1,0 +1,87 @@
+"""Cluster backend behaviour: ThreadCluster occupancy/crash isolation and
+SyncCluster eviction accounting (previously untested)."""
+import numpy as np
+
+from repro.core.executor import SyncCluster, ThreadCluster
+from repro.core.hypertrick import HyperTrick, RandomSearchPolicy
+from repro.core.search_space import LogUniform, SearchSpace
+from repro.core.service import TrialStatus
+
+
+def _space():
+    return SearchSpace({"x": LogUniform(0.01, 100.0)})
+
+
+def _objective(hp, phase, state):
+    return -abs(np.log(hp["x"])) * (1 + 0.1 * phase), state
+
+
+def test_thread_cluster_occupancy_and_budget():
+    policy = HyperTrick(_space(), w0=16, n_phases=3, eviction_rate=0.25,
+                        seed=2)
+    res = ThreadCluster(4, _objective).run(policy)
+    assert res.n_nodes == 4
+    assert 0.0 < res.occupancy <= 1.0 + 1e-9
+    s = res.summary()
+    assert s["n_trials"] == 16                  # full W0 budget consumed
+    assert 0.0 < s["alpha"] <= 1.0
+    # every record belongs to a known trial and node
+    for r in res.records:
+        assert r.trial_id in res.service.db.trials
+        assert 0 <= r.node < 4
+        assert r.t_end >= r.t_start >= 0.0
+
+
+def test_thread_cluster_crash_keeps_other_nodes_running():
+    def objective(hp, phase, state):
+        if hp["x"] > 0.9:
+            raise RuntimeError("boom")
+        return hp["x"], state
+
+    configs = [{"x": 0.1}, {"x": 0.95}, {"x": 0.2}, {"x": 0.3}]
+    policy = RandomSearchPolicy(SearchSpace({}), 4, 2, configs=configs)
+    res = ThreadCluster(2, objective).run(policy)
+    sts = {t.hparams["x"]: t.status for t in res.service.db.trials.values()}
+    assert sts[0.95] is TrialStatus.CRASHED
+    for x in (0.1, 0.2, 0.3):                   # strictly local effect
+        assert sts[x] is TrialStatus.COMPLETED
+    # a crashed trial with no reports never pollutes best-trial selection
+    best = res.service.db.best_trial()
+    assert best.status is not TrialStatus.CRASHED
+
+
+def test_crashed_trials_excluded_from_best_and_summary():
+    def objective(hp, phase, state):
+        if hp["x"] == 9.0:
+            if phase == 1:                      # crash AFTER a high report
+                raise RuntimeError("late boom")
+            return 100.0, state
+        return hp["x"], state
+
+    configs = [{"x": 1.0}, {"x": 9.0}, {"x": 2.0}]
+    policy = RandomSearchPolicy(SearchSpace({}), 3, 2, configs=configs)
+    res = ThreadCluster(1, objective).run(policy)
+    db = res.service.db
+    crashed = [t for t in db.trials.values()
+               if t.status is TrialStatus.CRASHED]
+    assert len(crashed) == 1 and crashed[0].best_metric == 100.0
+    # the 100.0 report came from the trial that then crashed: not selectable
+    assert db.best_trial().hparams["x"] == 2.0
+    assert db.summary()["best_metric"] == 2.0
+
+
+def test_sync_cluster_eviction_counts():
+    cluster = SyncCluster(4, _objective)
+    configs = [{"x": float(x)} for x in np.logspace(-1.5, 1.5, 8)]
+    res = cluster.run_sh(configs, n_phases=3, evict_frac=0.5)
+    db = res.service.db
+    assert len(db.trials) == 8
+    # survivors per phase: 8 -> 4 -> 2 -> keep max(1, 2-1) = 1
+    assert len(res.records) == 8 + 4 + 2
+    by_status = db.summary()["by_status"]
+    assert by_status == {"killed": 7, "completed": 1}
+    # the survivor is the planted optimum's nearest config
+    best = db.best_trial()
+    assert best.status is TrialStatus.COMPLETED
+    assert abs(np.log(best.hparams["x"])) == min(
+        abs(np.log(c["x"])) for c in configs)

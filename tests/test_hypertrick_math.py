@@ -5,6 +5,8 @@ import math
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.completion import (expected_alpha, hyperband_alpha,
