@@ -1,11 +1,16 @@
 """Benchmark harness — one function per paper table/figure plus system
-benches. Prints ``name,value,derived`` CSV.
+benches. Prints ``name,value,derived`` CSV; ``--json PATH`` additionally
+records the rows (plus run metadata) to a JSON file, which is how the repo
+keeps a perf trajectory (e.g. BENCH_population.json).
 
   PYTHONPATH=src python -m benchmarks.run [--only substring] [--fast]
+      [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -24,11 +29,13 @@ def _suites(fast: bool):
         ("kernels", sb.bench_kernels),
     ]
     if not fast:
+        from benchmarks import population_benches as pb
         suites += [
             ("ga3c_throughput", sb.bench_ga3c_throughput),
             ("lm_train_step", sb.bench_lm_train_step),
             ("metaopt_rl_real", mb.bench_metaopt_rl_real),
             ("backend_overhead", mb.bench_backend_overhead),  # distributed
+            ("population_throughput", pb.bench_population_throughput),
         ]
     return suites
 
@@ -37,10 +44,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + metadata to this JSON file")
     args = ap.parse_args()
 
     print("name,value,derived")
     failures = 0
+    all_rows = []
     for name, fn in _suites(args.fast):
         if args.only and args.only not in name:
             continue
@@ -54,7 +64,22 @@ def main() -> None:
         for rname, value, derived in rows:
             v = f"{value:.6g}" if isinstance(value, float) else value
             print(f'{rname},{v},"{derived}"')
+            all_rows.append({"name": rname, "value": value,
+                             "derived": derived})
         print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    if args.json:
+        doc = {
+            "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "argv": sys.argv[1:],
+            "rows": all_rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(all_rows)} rows to {args.json}",
+              file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -48,6 +48,8 @@ class ExecResult:
     records: List[ExecRecord]
     wall_time: float
     n_nodes: int
+    # backends that can count device work report it (population engine)
+    env_steps: Optional[int] = None
 
     @property
     def occupancy(self) -> float:
@@ -118,7 +120,7 @@ class ProcessCluster:
     def __init__(self, n_nodes: int, objective_spec: Dict,
                  lease_ttl: float = 15.0, heartbeat_interval: float = 1.0,
                  journal_path: Optional[str] = None, resume: bool = False,
-                 host: str = "127.0.0.1", port: int = 0):
+                 host: str = "127.0.0.1", port: int = 0, slots: int = 1):
         self.n_nodes = n_nodes
         self.objective_spec = dict(objective_spec)
         self.lease_ttl = lease_ttl
@@ -127,13 +129,19 @@ class ProcessCluster:
         self.resume = resume
         self.host = host
         self.port = port
+        # slots > 1: each worker process is a multi-trial population engine
+        # leasing up to this many trials at once (RL objectives only)
+        self.slots = slots
 
     def _worker_cmd(self, port: int, node: int) -> List[str]:
-        return [sys.executable, "-m", "repro.distributed.worker",
-                "--host", self.host, "--port", str(port),
-                "--spec", json.dumps(self.objective_spec),
-                "--node", str(node),
-                "--heartbeat-interval", str(self.heartbeat_interval)]
+        cmd = [sys.executable, "-m", "repro.distributed.worker",
+               "--host", self.host, "--port", str(port),
+               "--spec", json.dumps(self.objective_spec),
+               "--node", str(node),
+               "--heartbeat-interval", str(self.heartbeat_interval)]
+        if self.slots > 1:
+            cmd += ["--slots", str(self.slots)]
+        return cmd
 
     def spawn_workers(self, port: int) -> List[subprocess.Popen]:
         """Launch one worker process per node against a running server."""
@@ -181,7 +189,50 @@ class ProcessCluster:
         records = [ExecRecord(tid, node if node is not None else -1, phase,
                               ts, te, metric)
                    for tid, node, phase, ts, te, metric in server.report_log]
-        return ExecResult(svc, records, wall, self.n_nodes)
+        # capacity for occupancy accounting: slots trials fit in each worker
+        return ExecResult(svc, records, wall, self.n_nodes * self.slots)
+
+
+class PopulationCluster:
+    """The on-device population backend: every live trial trains
+    simultaneously inside vmapped, jitted GA3C steps
+    (``repro.population.engine``), driving the same ``OptimizationService``
+    and policy as every other backend. A "node" is a device slot: eviction
+    masks the slot and the next configuration is hot-swapped in, so the
+    paper's "stopped worker's node immediately acquires a fresh
+    configuration" happens at slot granularity with zero process churn.
+
+    RL objectives only (the engine vmaps the GA3C train step); ``slots``
+    defaults to the policy's initial worker count W0 so the entire
+    population is in flight from the first step.
+    """
+
+    def __init__(self, slots: Optional[int] = None, *, game: str = "pong",
+                 episodes_per_phase: int = 60, n_envs: int = 16,
+                 max_updates: int = 2000, seed: int = 0):
+        self.slots = slots
+        self.game = game
+        self.episodes_per_phase = episodes_per_phase
+        self.n_envs = n_envs
+        self.max_updates = max_updates
+        self.seed = seed
+
+    def run(self, policy: AsyncPolicy) -> ExecResult:
+        from repro.population.engine import LocalDriver, PopulationEngine
+        slots = self.slots or getattr(policy, "w0", None) \
+            or getattr(policy, "n_trials", None) or 8
+        svc = OptimizationService(policy)
+        engine = PopulationEngine(
+            self.game, max_slots=slots, n_envs=self.n_envs,
+            episodes_per_phase=self.episodes_per_phase,
+            max_updates=self.max_updates, seed=self.seed)
+        t0 = time.monotonic()
+        rows = engine.run(LocalDriver(svc))
+        wall = time.monotonic() - t0
+        records = [ExecRecord(tid, slot, phase, ts, te, metric)
+                   for tid, slot, phase, ts, te, metric in rows]
+        return ExecResult(svc, records, wall, slots,
+                          env_steps=engine.total_env_steps)
 
 
 class SyncCluster:

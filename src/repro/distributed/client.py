@@ -57,6 +57,22 @@ class ServiceClient:
             return None
         return RemoteTrial(resp.trial_id, resp.hparams, resp.n_phases)
 
+    def acquire_batch(self, node: Optional[int] = None, slots: int = 1):
+        """Lease up to ``slots`` trials in one round-trip (population
+        workers). A list of RemoteTrials (possibly fewer than ``slots``),
+        a Pending marker, or None (budget spent for good)."""
+        resp = self._call(proto.AcquireRequest(node=node,
+                                               slots=max(1, slots)))
+        if resp.trial_id is None:
+            if resp.retry_after is not None:
+                return Pending(resp.retry_after)
+            return None
+        trials = [RemoteTrial(resp.trial_id, resp.hparams, resp.n_phases)]
+        for extra in (resp.batch or []):
+            trials.append(RemoteTrial(extra["trial_id"], extra["hparams"],
+                                      resp.n_phases))
+        return trials
+
     def report(self, trial_id: int, phase: int, metric: float,
                t_start: float = 0.0, t_end: float = 0.0,
                node: Optional[int] = None) -> str:

@@ -39,6 +39,9 @@ def message(type_name: str):
 @message("acquire")
 class AcquireRequest:
     node: Optional[int] = None
+    # multi-trial workers (population engine): lease up to this many trials
+    # in one round-trip. Old clients simply omit the field (default 1).
+    slots: int = 1
 
 
 @message("report")
@@ -81,6 +84,12 @@ class AcquireResponse:
     # budget spent but leases outstanding: a reclaimed config may still be
     # requeued — poll again after this many seconds instead of exiting
     retry_after: Optional[float] = None
+    # extra leases granted for a slots>1 request, beyond the primary one:
+    # [{"trial_id": ..., "hparams": ...}, ...]; None for slots=1 requests.
+    # Omitted from the wire when None so pre-slots clients (strict decode,
+    # no batch field) keep working against an upgraded server.
+    batch: Optional[list] = None
+    OMIT_IF_NONE = ("batch",)
 
 
 @message("report_ok")
@@ -127,6 +136,9 @@ def json_default(obj):
 
 def encode(msg) -> bytes:
     payload = dataclasses.asdict(msg)
+    for name in getattr(msg, "OMIT_IF_NONE", ()):
+        if payload.get(name) is None:
+            del payload[name]
     payload["type"] = msg.TYPE
     data = json.dumps(payload, sort_keys=True,
                       default=json_default).encode("utf-8")
@@ -146,8 +158,13 @@ def decode(data: bytes):
     cls = _REGISTRY.get(type_name)
     if cls is None:
         raise ProtocolError(f"unknown message type {type_name!r}")
+    # protobuf-style evolution rule: unknown fields are ignored, so an old
+    # peer keeps working when the other side grows the message (e.g. the
+    # ``slots``/``batch`` ACQUIRE extension); a missing required field is
+    # still an error
+    known = {f.name for f in dataclasses.fields(cls)}
     try:
-        return cls(**obj)
+        return cls(**{k: v for k, v in obj.items() if k in known})
     except TypeError as e:
         raise ProtocolError(f"bad fields for {type_name!r}: {e}") from e
 

@@ -139,21 +139,31 @@ class MetaoptServer:
 
     def _do_acquire(self, msg: proto.AcquireRequest):
         n_phases = self.service.policy.n_phases
+        slots = max(1, int(getattr(msg, "slots", 1) or 1))
         # atomic with the reaper: either we get the requeued config of a
         # just-reclaimed trial, or we still see its lease and tell the
         # worker to retry — a dying worker's config can never be lost
+        recs = []
         with self._lease_lock:
-            rec = self.service.acquire_trial(msg.node)
-            if rec is None:
+            for _ in range(slots):
+                rec = self.service.acquire_trial(msg.node)
+                if rec is None:
+                    break
+                self._leases[rec.trial_id] = self.clock() + self.lease_ttl
+                recs.append(rec)
+            if not recs:
                 retry = (min(1.0, self.lease_ttl / 2)
                          if self._leases else None)
                 return proto.AcquireResponse(None, None, n_phases,
                                              retry_after=retry)
-            self._leases[rec.trial_id] = self.clock() + self.lease_ttl
-        self._journal({"ev": "acquire", "trial_id": rec.trial_id,
-                       "hparams": rec.hparams, "node": rec.node,
-                       "requeued": rec.requeued, "t": rec.start_time})
-        return proto.AcquireResponse(rec.trial_id, rec.hparams, n_phases)
+        for rec in recs:
+            self._journal({"ev": "acquire", "trial_id": rec.trial_id,
+                           "hparams": rec.hparams, "node": rec.node,
+                           "requeued": rec.requeued, "t": rec.start_time})
+        batch = [{"trial_id": r.trial_id, "hparams": r.hparams}
+                 for r in recs[1:]] or None
+        return proto.AcquireResponse(recs[0].trial_id, recs[0].hparams,
+                                     n_phases, batch=batch)
 
     def _do_report(self, msg: proto.ReportRequest):
         rec = self.service.db.trials.get(msg.trial_id)

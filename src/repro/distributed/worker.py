@@ -186,6 +186,10 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--node", type=int, default=None)
     ap.add_argument("--heartbeat-interval", type=float, default=2.0)
+    ap.add_argument("--slots", type=int, default=1,
+                    help="lease up to this many trials at once and train "
+                         "them in the on-device population engine (RL "
+                         "objectives only; 1 = classic scalar worker)")
     args = ap.parse_args(argv)
 
     if args.spec is not None:
@@ -195,6 +199,23 @@ def main(argv=None) -> int:
                           episodes_per_phase=args.episodes_per_phase,
                           steps_per_phase=args.steps_per_phase,
                           seed=args.seed)
+
+    if args.slots > 1:
+        if spec.get("kind") != "rl":
+            print(f"--slots {args.slots} requires an RL spec, got "
+                  f"{spec.get('kind')!r}")
+            return 2
+        from repro.population.worker import main as population_main
+        return population_main([
+            "--host", args.host, "--port", str(args.port),
+            "--game", spec.get("game", "pong"),
+            "--slots", str(args.slots),
+            "--episodes-per-phase",
+            str(spec.get("episodes_per_phase", 20)),
+            "--max-updates", str(spec.get("max_updates", 2000)),
+            "--seed", str(spec.get("seed", 0)),
+            "--heartbeat-interval", str(args.heartbeat_interval)]
+            + ([] if args.node is None else ["--node", str(args.node)]))
 
     objective = resolve_objective(spec)
     try:

@@ -20,7 +20,8 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.core.executor import ProcessCluster, ThreadCluster
+from repro.core.executor import (PopulationCluster, ProcessCluster,
+                                 ThreadCluster)
 from repro.core.hypertrick import HyperTrick, RandomSearchPolicy
 from repro.core.completion import expected_alpha, min_alpha
 from repro.core.search_space import (LogUniform, SearchSpace, lm_space,
@@ -57,11 +58,22 @@ def main():
     ap.add_argument("--policy", choices=["hypertrick", "random"],
                     default="hypertrick")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backend", choices=["thread", "process", "server"],
+    ap.add_argument("--backend",
+                    choices=["thread", "process", "server", "vectorized"],
                     default="thread",
                     help="thread: in-process node threads; process: OS-"
                          "process workers over TCP; server: process workers "
-                         "plus a durable journal (resumable)")
+                         "plus a durable journal (resumable); vectorized: "
+                         "the on-device population engine — all live trials "
+                         "train simultaneously in vmapped jitted steps "
+                         "(RL objective only)")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="vectorized: simultaneous on-device trials "
+                         "(default: --workers); process/server with an RL "
+                         "objective: trials leased per worker process "
+                         "(default 1 = classic scalar workers)")
+    ap.add_argument("--n-envs", type=int, default=16,
+                    help="vectorized envs per trial (vectorized backend)")
     ap.add_argument("--journal", default=None,
                     help="journal path (default for --backend server: "
                          "metaopt_journal.jsonl; optional for process). "
@@ -87,7 +99,18 @@ def main():
         policy = RandomSearchPolicy(space, args.workers, args.phases,
                                     seed=args.seed)
 
-    if args.backend == "thread":
+    if args.backend == "vectorized":
+        if args.objective != "rl":
+            ap.error("--backend vectorized vmaps the GA3C train step; only "
+                     "--objective rl is supported")
+        if args.resume or args.journal:
+            ap.error("--journal/--resume need a socket backend "
+                     "(--backend process or server)")
+        cluster = PopulationCluster(
+            args.slots or args.workers, game=args.game,
+            episodes_per_phase=args.episodes_per_phase,
+            n_envs=args.n_envs, seed=args.seed)
+    elif args.backend == "thread":
         if args.resume or args.journal:
             ap.error("--journal/--resume need a socket backend "
                      "(--backend process or server)")
@@ -111,10 +134,14 @@ def main():
         if args.resume and journal_path is None:
             ap.error("--resume requires a journal "
                      "(--backend server or --journal PATH)")
+        if args.slots and args.slots > 1 and args.objective != "rl":
+            ap.error("--slots > 1 (population workers) requires "
+                     "--objective rl")
         cluster = ProcessCluster(args.nodes, build_objective_spec(args),
                                  lease_ttl=args.lease_ttl,
                                  journal_path=journal_path,
-                                 resume=args.resume)
+                                 resume=args.resume,
+                                 slots=args.slots or 1)
 
     result = cluster.run(policy)
     summary = result.summary()

@@ -83,6 +83,18 @@ def moe_local(cfg: ModelConfig, p, x):
 # ---------------------------------------------------------------------------
 # sharded paths (shard_map)
 # ---------------------------------------------------------------------------
+def _shard_map(body, mesh, in_specs, out_specs):
+    """jax.shard_map/check_vma only exist on newer jax; 0.4.x spells them
+    jax.experimental.shard_map.shard_map/check_rep."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
 def _expert_parallel_body(cfg: ModelConfig, e_local: int, capacity: int,
                           dp: tuple, p, x):
     """Runs per (data-rank, model-rank). x: (B_local, S, D) replicated over
@@ -231,9 +243,8 @@ def moe_block(cfg: ModelConfig, p, x, mesh=None):
             body = partial(_expert_parallel_a2a_body, cfg, e_local, mp,
                            capacity, dp)
             xspec_in = P(xspec[0], "model", None)
-            fn = jax.shard_map(body, mesh=mesh,
-                               in_specs=(pspecs_a2a(p), xspec_in),
-                               out_specs=(xspec_in, P()), check_vma=False)
+            fn = _shard_map(body, mesh, (pspecs_a2a(p), xspec_in),
+                            (xspec_in, P()))
             return fn(p, x)
         t = b_local * x.shape[1]
         capacity = int(t * cfg.top_k / mp * cfg.capacity_factor) + 1
@@ -245,7 +256,5 @@ def moe_block(cfg: ModelConfig, p, x, mesh=None):
         pspecs["we_down"] = P(None, "model", None)
         body = partial(_tensor_parallel_body, cfg, dp)
 
-    fn = jax.shard_map(
-        body, mesh=mesh, in_specs=(pspecs, xspec),
-        out_specs=(xspec, P()), check_vma=False)
+    fn = _shard_map(body, mesh, (pspecs, xspec), (xspec, P()))
     return fn(p, x)

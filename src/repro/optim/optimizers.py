@@ -36,8 +36,11 @@ def init_opt_state(tc: TrainConfig, params) -> OptState:
                                  params))
 
 
-def learning_rate(tc: TrainConfig, step) -> jax.Array:
-    lr = jnp.asarray(tc.learning_rate, jnp.float32)
+def learning_rate(tc: TrainConfig, step, base=None) -> jax.Array:
+    """``base`` overrides ``tc.learning_rate`` — it may be a traced scalar,
+    which is how the population engine vmaps one train step over per-trial
+    learning rates (the config value is a python float baked into the jit)."""
+    lr = jnp.asarray(tc.learning_rate if base is None else base, jnp.float32)
     if tc.warmup_steps:
         lr = lr * jnp.minimum(1.0, (step + 1) / tc.warmup_steps)
     return lr
@@ -51,10 +54,11 @@ def _clip_by_global_norm(grads, max_norm: float):
     return jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads), gn
 
 
-def apply_updates(tc: TrainConfig, params, grads, state: OptState):
-    """Returns (new_params, new_state, grad_norm)."""
+def apply_updates(tc: TrainConfig, params, grads, state: OptState, lr=None):
+    """Returns (new_params, new_state, grad_norm). ``lr`` (optional traced
+    scalar) overrides the config learning rate — see ``learning_rate``."""
     grads, gnorm = _clip_by_global_norm(grads, tc.grad_clip)
-    lr = learning_rate(tc, state.step)
+    lr = learning_rate(tc, state.step, base=lr)
     if tc.optimizer == "rmsprop":
         # non-centered RMSProp: g2 <- d*g2 + (1-d)*g^2 ; p -= lr*g/sqrt(g2+eps)
         d = tc.rmsprop_decay

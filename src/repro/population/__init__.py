@@ -1,0 +1,6 @@
+"""On-device population engine: the whole HyperTrick search as vmapped,
+jitted GA3C train steps (see engine.py)."""
+from repro.population.engine import (LocalDriver, PopulationEngine,
+                                     TrialLease)
+
+__all__ = ["PopulationEngine", "LocalDriver", "TrialLease"]

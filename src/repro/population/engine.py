@@ -1,0 +1,442 @@
+"""The on-device population engine: every live HyperTrick trial trains
+simultaneously inside vmapped, jitted GA3C train steps.
+
+Instead of one ``GA3CTrainer`` (one jit, one Python worker) per
+configuration, per-trial params / optimizer state / env state are stacked
+along a leading *slot* axis and the existing ``a3c.rollout`` + loss +
+``optim.apply_updates`` update is vmapped over the per-trial continuous
+hyperparameters (``learning_rate``, ``gamma``, ``beta``). Trials are
+bucketed by the *structural* hyperparameter ``t_max`` (the scan length of
+the rollout), so each bucket is exactly one jitted step with donated
+buffers. Eviction is device-side masking — a stopped slot's state is frozen
+via ``jnp.where`` and the slot is immediately hot-swapped with the next
+configuration from the service — which is the paper's §3.2 "the stopped
+worker's node immediately acquires a fresh configuration", at slot
+granularity on one device.
+
+The engine is driven through a small *driver* interface so the same loop
+serves two deployments:
+
+* ``LocalDriver``    — wraps an in-process ``OptimizationService``
+  (``core.executor.PopulationCluster``, ``launch/tune.py --backend
+  vectorized``);
+* ``RemoteDriver``   — wraps the PR-1 TCP ``ServiceClient``, leasing up to
+  ``slots`` trials per ACQUIRE so one GPU node serves an entire search
+  (``population.worker``).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.optimizers import apply_updates, init_opt_state
+from repro.rl.a3c import a3c_loss, init_loop_state, rollout
+from repro.rl.envs.minigames import make_env
+from repro.rl.ga3c import ga3c_train_config, trial_seed
+from repro.rl.network import A3CNetConfig, apply_net, init_net
+
+
+@dataclass(frozen=True)
+class TrialLease:
+    trial_id: int
+    hparams: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# drivers: how the engine talks to the metaoptimization service
+# ---------------------------------------------------------------------------
+class LocalDriver:
+    """In-process service — the engine IS the whole cluster."""
+
+    def __init__(self, service):
+        self.service = service
+
+    def acquire_many(self, k: int) -> Tuple[List[TrialLease], Optional[float]]:
+        """Up to ``k`` fresh leases. ``(leases, retry)``: ``retry`` is None
+        when an empty result is final (budget spent), else seconds to wait
+        before polling again."""
+        leases = []
+        for slot in range(k):
+            rec = self.service.acquire_trial()
+            if rec is None:
+                break
+            leases.append(TrialLease(rec.trial_id, rec.hparams))
+        return leases, None
+
+    def report(self, trial_id: int, phase: int, metric: float,
+               t_start: float, t_end: float) -> str:
+        return self.service.report(trial_id, phase, metric).value
+
+    def poll_lost(self) -> set:
+        """Trials whose lease was revoked out from under us (remote only)."""
+        return set()
+
+
+class RemoteDriver:
+    """The PR-1 TCP client — one process leases a whole population. A lease
+    lost to the server's reaper (reported by the worker's heartbeat thread
+    via ``mark_lost``) is abandoned without a report, exactly like a worker
+    death with strictly local effect."""
+
+    def __init__(self, client, node: Optional[int] = None):
+        self.client = client
+        self.node = node
+        self._lost: set = set()
+        self._t0 = time.monotonic()
+
+    def acquire_many(self, k: int) -> Tuple[List[TrialLease], Optional[float]]:
+        from repro.distributed.client import Pending
+        got = self.client.acquire_batch(node=self.node, slots=k)
+        if got is None:
+            return [], None
+        if isinstance(got, Pending):
+            return [], got.retry_after
+        return [TrialLease(t.trial_id, t.hparams) for t in got], None
+
+    def report(self, trial_id: int, phase: int, metric: float,
+               t_start: float, t_end: float) -> str:
+        from repro.distributed.client import ServiceError
+        try:
+            return self.client.report(trial_id, phase, metric,
+                                      t_start=t_start, t_end=t_end,
+                                      node=self.node)
+        except ServiceError:
+            # stale trial (server restarted / lease reaped between our
+            # heartbeat and this report): strictly local effect — drop the
+            # one slot, keep the rest of the population training
+            return "stop"
+
+    def mark_lost(self, trial_id: int) -> None:
+        self._lost.add(trial_id)
+
+    def poll_lost(self) -> set:
+        lost, self._lost = self._lost, set()
+        return lost
+
+
+# ---------------------------------------------------------------------------
+# slots and buckets
+# ---------------------------------------------------------------------------
+@dataclass
+class SlotMeta:
+    """Host-side bookkeeping for one live trial in a bucket slot."""
+    trial_id: int
+    hparams: Dict[str, Any]
+    slot_id: int                      # stable global slot number ("node")
+    phase: int = 0
+    updates_in_phase: int = 0
+    phase_t0: float = 0.0
+    start_sum: float = 0.0
+    start_n: float = 0.0
+
+
+class Bucket:
+    """All slots sharing one structural ``t_max``: stacked pytrees with a
+    leading axis of ``capacity``, one compiled train step."""
+
+    def __init__(self, engine: "PopulationEngine", t_max: int, capacity: int):
+        self.engine = engine
+        self.t_max = t_max
+        self.capacity = capacity
+        tmpl_p = init_net(engine.net_cfg, jax.random.PRNGKey(0))
+        tmpl = (tmpl_p, init_opt_state(engine.tc, tmpl_p),
+                init_loop_state(engine.env, engine.n_envs,
+                                jax.random.PRNGKey(0)))
+        zeros = lambda x: jnp.zeros((capacity,) + x.shape, x.dtype)
+        self.params, self.opt_state, self.loop = (
+            jax.tree.map(zeros, t) for t in tmpl)
+        self.lr = np.zeros(capacity, np.float32)
+        self.gamma = np.zeros(capacity, np.float32)
+        self.beta = np.zeros(capacity, np.float32)
+        self.active = np.zeros(capacity, bool)
+        self._hyper_dev = None          # device mirror, refreshed on change
+        self.meta: List[Optional[SlotMeta]] = [None] * capacity
+        self.slot_ids = [engine._new_slot_id() for _ in range(capacity)]
+        self._step = _bucket_step(engine.game, t_max, capacity,
+                                  engine.n_envs)
+
+    # -- slot management ----------------------------------------------------
+    def free_index(self) -> Optional[int]:
+        for i in range(self.capacity):
+            if not self.active[i]:
+                return i
+        return None
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    def grow(self, new_capacity: int) -> None:
+        pad = new_capacity - self.capacity
+        assert pad > 0
+        padz = lambda x: jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+        self.params, self.opt_state, self.loop = (
+            jax.tree.map(padz, t)
+            for t in (self.params, self.opt_state, self.loop))
+        for name in ("lr", "gamma", "beta"):
+            setattr(self, name, np.concatenate(
+                [getattr(self, name), np.zeros(pad, np.float32)]))
+        self.active = np.concatenate([self.active, np.zeros(pad, bool)])
+        self._hyper_dev = None
+        self.meta += [None] * pad
+        self.slot_ids += [self.engine._new_slot_id() for _ in range(pad)]
+        self.capacity = new_capacity
+        self._step = _bucket_step(self.engine.game, self.t_max, new_capacity,
+                                  self.engine.n_envs)
+
+    def write_slot(self, i: int, meta: SlotMeta, params, opt_state, loop,
+                   lr: float, gamma: float, beta: float) -> None:
+        """Hot-swap a fresh configuration into slot ``i``."""
+        setter = lambda a, v: a.at[i].set(v)
+        self.params = jax.tree.map(setter, self.params, params)
+        self.opt_state = jax.tree.map(setter, self.opt_state, opt_state)
+        self.loop = jax.tree.map(setter, self.loop, loop)
+        self.lr[i], self.gamma[i], self.beta[i] = lr, gamma, beta
+        self.active[i] = True
+        self.meta[i] = meta
+        self._hyper_dev = None
+
+    def release(self, i: int) -> None:
+        """Device-side eviction: mask the slot; its params stop updating
+        (frozen by the step's ``where``) until a fresh config is swapped in."""
+        self.active[i] = False
+        self.meta[i] = None
+        self._hyper_dev = None
+
+    # -- the one jitted step ------------------------------------------------
+    def step(self) -> None:
+        if self._hyper_dev is None:
+            self._hyper_dev = tuple(jnp.asarray(a) for a in
+                                    (self.lr, self.gamma, self.beta,
+                                     self.active))
+        self.params, self.opt_state, self.loop = self._step(
+            self.params, self.opt_state, self.loop, *self._hyper_dev)
+
+
+# full-unroll ceiling: XLA:CPU won't parallelize inside while loops, so
+# unrolling ~2x-halves the step time of a multi-slot bucket — but compile
+# time grows with t_max * capacity, so large-t_max buckets keep the loop
+# (partial unrolls measure no faster than unroll=1 here; only full pays)
+UNROLL_T_MAX = 16
+
+
+@functools.lru_cache(maxsize=64)
+def _bucket_step(game: str, t_max: int, capacity: int, n_envs: int):
+    """One jitted, buffer-donating train step for a whole bucket, cached at
+    module level: hyperparameters are traced inputs, so ONE compilation
+    serves every configuration that ever occupies the bucket — per-trial
+    backends cannot reuse compiles because each trial's hyperparameters are
+    burned into its jit as constants. (``n_envs`` is part of the key; it
+    fixes the stacked shapes.)
+
+    The per-slot body is *exactly* the ``GA3CTrainer`` train step, with the
+    continuous hyperparameters as traced scalars instead of baked
+    constants. ``capacity == 1`` skips vmap and keeps the trainer's compact
+    rollout scan, so a single-trial population is the same XLA program as
+    the thread backend (bit-for-bit parity)."""
+    env = make_env(game)
+    tc = ga3c_train_config(3e-4)       # lr comes in traced, not from here
+    unroll = t_max if (capacity > 1 and t_max <= UNROLL_T_MAX) else 1
+
+    def one(params, opt_state, loop, lr, gamma, beta):
+        traj, new_loop = rollout(env, params, loop, t_max, unroll=unroll)
+        _, v_boot = apply_net(params, new_loop.obs_stack)
+        v_boot = v_boot * (1.0 - traj.dones[-1])
+        grads, _ = jax.grad(
+            lambda p: a3c_loss(p, traj, v_boot, gamma=gamma, beta=beta),
+            has_aux=True)(params)
+        params, opt_state, _ = apply_updates(tc, params, grads, opt_state,
+                                             lr=lr)
+        return params, opt_state, new_loop
+
+    if capacity == 1:
+        def batched(params, opt_state, loop, lr, gamma, beta):
+            squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
+            out = one(squeeze(params), squeeze(opt_state), squeeze(loop),
+                      lr[0], gamma[0], beta[0])
+            return tuple(jax.tree.map(lambda x: x[None], t) for t in out)
+    else:
+        batched = jax.vmap(one)
+
+    def step(params, opt_state, loop, lr, gamma, beta, active):
+        new = batched(params, opt_state, loop, lr, gamma, beta)
+        def keep_active(n, o):
+            mask = active.reshape((capacity,) + (1,) * (n.ndim - 1))
+            return jnp.where(mask, n, o)
+        return tuple(jax.tree.map(keep_active, n, o)
+                     for n, o in zip(new, (params, opt_state, loop)))
+
+    return jax.jit(step, donate_argnums=(0, 1, 2))
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+class PopulationEngine:
+    """Runs a whole asynchronous search on one device.
+
+    The loop: fill free slots from the driver (service), run every bucket's
+    jitted step once, poll the episode counters, report finished phases,
+    mask evicted slots and hot-swap fresh configurations into them. Phase
+    semantics match ``GA3CTrainer.run_episodes`` exactly: a phase ends after
+    the update in which ``episodes_per_phase`` episodes have finished, or at
+    ``max_updates`` updates."""
+
+    def __init__(self, game: str, *, max_slots: int, n_envs: int = 16,
+                 episodes_per_phase: int = 60, max_updates: int = 2000,
+                 seed: int = 0):
+        self.game = game
+        self.env = make_env(game)
+        self.net_cfg = A3CNetConfig(grid=self.env.spec.grid,
+                                    n_actions=self.env.spec.n_actions)
+        # lr is overridden per-slot inside the step; the config value is
+        # only the (unused) default
+        self.tc = ga3c_train_config(3e-4)
+        self.max_slots = max_slots
+        self.n_envs = n_envs
+        self.episodes_per_phase = episodes_per_phase
+        self.max_updates = max_updates
+        self.seed = seed
+        self.buckets: Dict[int, Bucket] = {}
+        self.total_env_steps = 0       # active-lane env transitions
+        self.total_updates = 0
+        self._slot_counter = 0
+        self.records: List[Tuple] = []  # (trial_id, slot, phase, t0, t1, m)
+
+    def _new_slot_id(self) -> int:
+        self._slot_counter += 1
+        return self._slot_counter - 1
+
+    @property
+    def n_active(self) -> int:
+        return sum(b.n_active for b in self.buckets.values())
+
+    def active_trial_ids(self) -> List[int]:
+        """Snapshot of live trial ids. Called from the worker's heartbeat
+        thread while the engine mutates buckets: every container is copied
+        in one C-level call (atomic under the GIL) before iterating."""
+        out = []
+        for b in list(self.buckets.values()):
+            for m, a in zip(list(b.meta), list(b.active)):
+                if a and m is not None:
+                    out.append(m.trial_id)
+        return out
+
+    # -- admission ----------------------------------------------------------
+    def admit(self, lease: TrialLease, now: float = 0.0) -> None:
+        hp = lease.hparams
+        t_max = int(hp.get("t_max", 8))
+        bucket = self.buckets.get(t_max)
+        if bucket is None:
+            bucket = self.buckets[t_max] = Bucket(self, t_max, 1)
+        i = bucket.free_index()
+        if i is None:
+            i = bucket.capacity
+            bucket.grow(bucket.capacity + 1)
+        rng = jax.random.PRNGKey(trial_seed(self.seed, hp))
+        k_net, k_env = jax.random.split(rng)
+        params = init_net(self.net_cfg, k_net)
+        opt_state = init_opt_state(self.tc, params)
+        loop = init_loop_state(self.env, self.n_envs, k_env)
+        meta = SlotMeta(lease.trial_id, hp, bucket.slot_ids[i],
+                        phase_t0=now)
+        bucket.write_slot(i, meta, params, opt_state, loop,
+                          float(hp["learning_rate"]), float(hp["gamma"]),
+                          float(hp.get("beta", 0.01)))
+
+    def _admit_grouped(self, leases: Sequence[TrialLease],
+                       now: float) -> None:
+        """Group by t_max and pre-size buckets so an initial population of k
+        same-t_max trials compiles ONE step, not k."""
+        by_tmax: Dict[int, List[TrialLease]] = {}
+        for lease in leases:
+            by_tmax.setdefault(int(lease.hparams.get("t_max", 8)),
+                               []).append(lease)
+        for t_max, group in by_tmax.items():
+            bucket = self.buckets.get(t_max)
+            free = (bucket.capacity - bucket.n_active) if bucket else 0
+            need = len(group) - free
+            if bucket is None:
+                self.buckets[t_max] = Bucket(self, t_max, len(group))
+            elif need > 0:
+                bucket.grow(bucket.capacity + need)
+            for lease in group:
+                self.admit(lease, now)
+
+    # -- the loop -----------------------------------------------------------
+    def run(self, driver) -> List[Tuple]:
+        t0 = time.monotonic()
+        exhausted = False
+        retry_at = 0.0
+        while True:
+            now = time.monotonic()
+            if (not exhausted and self.n_active < self.max_slots
+                    and now >= retry_at):
+                leases, retry = driver.acquire_many(
+                    self.max_slots - self.n_active)
+                if leases:
+                    self._admit_grouped(leases, now - t0)
+                elif retry is None:
+                    exhausted = True
+                else:
+                    retry_at = now + retry
+            lost = driver.poll_lost()
+            if lost:
+                self._abandon(lost)
+            if self.n_active == 0:
+                if exhausted:
+                    break
+                time.sleep(min(max(retry_at - time.monotonic(), 0.01), 0.5))
+                continue
+            for bucket in self.buckets.values():
+                if bucket.n_active:
+                    bucket.step()
+                    self.total_updates += bucket.n_active
+                    self.total_env_steps += (bucket.n_active * bucket.t_max
+                                             * self.n_envs)
+            self._poll_phases(driver, t0)
+        return self.records
+
+    def _poll_phases(self, driver, t0: float) -> None:
+        for bucket in self.buckets.values():
+            if not bucket.n_active:
+                continue
+            fin_n = np.asarray(bucket.loop.finished_n)
+            fin_sum = np.asarray(bucket.loop.finished_sum)
+            for i in range(bucket.capacity):
+                meta = bucket.meta[i]
+                if meta is None or not bucket.active[i]:
+                    continue
+                meta.updates_in_phase += 1
+                n = float(fin_n[i]) - meta.start_n
+                if (n < self.episodes_per_phase
+                        and meta.updates_in_phase < self.max_updates):
+                    continue
+                score = (float(fin_sum[i]) - meta.start_sum) / max(n, 1.0)
+                t_now = time.monotonic() - t0
+                decision = driver.report(meta.trial_id, meta.phase, score,
+                                         meta.phase_t0, t_now)
+                self.records.append((meta.trial_id, meta.slot_id, meta.phase,
+                                     meta.phase_t0, t_now, score))
+                if decision == "stop":
+                    bucket.release(i)
+                else:
+                    meta.phase += 1
+                    meta.updates_in_phase = 0
+                    meta.start_n = float(fin_n[i])
+                    meta.start_sum = float(fin_sum[i])
+                    meta.phase_t0 = t_now
+
+    def _abandon(self, trial_ids: set) -> None:
+        for bucket in self.buckets.values():
+            for i in range(bucket.capacity):
+                meta = bucket.meta[i]
+                if meta is not None and meta.trial_id in trial_ids:
+                    bucket.release(i)

@@ -1,0 +1,100 @@
+"""Multi-trial worker: one process leases up to ``--slots`` trials from the
+PR-1 TCP server and trains them all in the on-device population engine.
+
+  PYTHONPATH=src python -m repro.population.worker --host H --port P \\
+      --game pong --slots 8
+
+This is the deployment shape where a single GPU node serves an entire
+HyperTrick search: the ACQUIRE verb carries a ``slots`` hint, the server
+grants a batch of leases, and the engine keeps every leased trial training
+inside vmapped jitted steps while a heartbeat thread renews all the leases.
+A lease the server reaps (this worker presumed dead, or a server restart)
+is abandoned mid-flight — its slot is masked and hot-swapped, the same
+strictly-local effect as a whole-worker death in the scalar protocol.
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+from typing import Optional
+
+from repro.distributed.client import ServiceClient, ServiceError
+from repro.distributed.protocol import ProtocolError
+from repro.population.engine import PopulationEngine, RemoteDriver
+
+
+class PopulationWorkerAgent:
+    """``WorkerAgent`` generalized from one leased trial to a population."""
+
+    def __init__(self, client: ServiceClient, engine: PopulationEngine,
+                 heartbeat_interval: float = 2.0,
+                 node: Optional[int] = None):
+        self.client = client
+        self.engine = engine
+        self.driver = RemoteDriver(client, node=node)
+        self.heartbeat_interval = heartbeat_interval
+        self._stop = threading.Event()
+
+    def run(self) -> int:
+        """Drive the engine until the search budget is spent or the server
+        goes away. Returns the number of phase reports delivered."""
+        hb = threading.Thread(target=self._heartbeat_loop, daemon=True)
+        hb.start()
+        try:
+            # only driver I/O means "server gone"; engine/XLA failures must
+            # propagate (an OOM swallowed here would loop forever through
+            # lease-reap -> requeue -> same worker -> same OOM)
+            records = self.engine.run(self.driver)
+        except (ServiceError, ProtocolError, OSError):
+            records = self.engine.records    # server gone — we are done
+        finally:
+            self._stop.set()
+            hb.join(timeout=2 * self.heartbeat_interval)
+        return len(records)
+
+    def _heartbeat_loop(self):
+        while not self._stop.wait(self.heartbeat_interval):
+            try:
+                for tid in self.engine.active_trial_ids():
+                    ok = self.client.heartbeat(tid)
+                    if not ok:
+                        self.driver.mark_lost(tid)
+            except Exception:               # noqa: BLE001 — never let the
+                continue                    # lease-renewal thread die
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--game", default="pong")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--n-envs", type=int, default=16)
+    ap.add_argument("--episodes-per-phase", type=int, default=20)
+    ap.add_argument("--max-updates", type=int, default=2000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--node", type=int, default=None)
+    ap.add_argument("--heartbeat-interval", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    engine = PopulationEngine(args.game, max_slots=args.slots,
+                              n_envs=args.n_envs,
+                              episodes_per_phase=args.episodes_per_phase,
+                              max_updates=args.max_updates, seed=args.seed)
+    try:
+        client = ServiceClient(args.host, args.port)
+    except OSError as e:
+        print(f"cannot reach server at {args.host}:{args.port}: {e}")
+        return 1
+    with client:
+        agent = PopulationWorkerAgent(
+            client, engine, heartbeat_interval=args.heartbeat_interval,
+            node=args.node)
+        n = agent.run()
+    print(f"population worker node={args.node} delivered {n} phase reports "
+          f"({engine.total_env_steps} env steps)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

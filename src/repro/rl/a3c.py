@@ -45,8 +45,14 @@ def init_loop_state(env: Env, n_envs: int, rng) -> LoopState:
                      jnp.zeros(()), jnp.zeros(()))
 
 
-def rollout(env: Env, params, loop: LoopState, t_max: int):
-    """Collect t_max steps from every env; returns (traj, new loop state)."""
+def rollout(env: Env, params, loop: LoopState, t_max: int, unroll: int = 1):
+    """Collect t_max steps from every env; returns (traj, new loop state).
+
+    ``unroll`` is forwarded to the scan. XLA:CPU neither multithreads nor
+    fuses across while-loop iterations, so the population engine fully
+    unrolls small-t_max buckets (~2x step time); the scalar trainer keeps
+    the compact loop because its jit is rebuilt per trial and compile time
+    dominates there."""
 
     def step(carry, _):
         ls = carry
@@ -65,7 +71,7 @@ def rollout(env: Env, params, loop: LoopState, t_max: int):
         return new, (ls.obs_stack, actions, reward, done)
 
     new_loop, (obs, actions, rewards, dones) = jax.lax.scan(
-        step, loop, None, length=t_max)
+        step, loop, None, length=t_max, unroll=unroll)
     return Trajectory(obs, actions, rewards,
                       dones.astype(jnp.float32)), new_loop
 

@@ -28,6 +28,18 @@ class GA3CHyperParams:
     beta: float = 0.01
 
 
+def trial_seed(base_seed: int, hparams: dict) -> int:
+    """Per-trial seed derivation — shared by the thread objective and the
+    population engine so a trial's stream is identical on both backends."""
+    return base_seed + hash(str(sorted(hparams.items()))) % 10_000
+
+
+def ga3c_train_config(learning_rate: float) -> TrainConfig:
+    """The paper's GA3C optimizer settings (shared-statistics RMSProp)."""
+    return TrainConfig(learning_rate=learning_rate, optimizer="rmsprop",
+                       rmsprop_decay=0.99, rmsprop_eps=0.1, grad_clip=5.0)
+
+
 class GA3CTrainer:
     """One GA3C worker: trains a policy on one game. ``run_episodes`` is the
     phase unit HyperTrick schedules (paper: 2500 episodes/phase)."""
@@ -42,9 +54,7 @@ class GA3CTrainer:
         net_cfg = A3CNetConfig(grid=self.env.spec.grid,
                                n_actions=self.env.spec.n_actions)
         self.params = init_net(net_cfg, k_net)
-        self.tc = TrainConfig(learning_rate=hp.learning_rate,
-                              optimizer="rmsprop", rmsprop_decay=0.99,
-                              rmsprop_eps=0.1, grad_clip=5.0)
+        self.tc = ga3c_train_config(hp.learning_rate)
         self.opt_state = init_opt_state(self.tc, self.params)
         self.loop = init_loop_state(self.env, n_envs, k_env)
         self.episodes = 0
@@ -105,8 +115,7 @@ def make_rl_objective(game: str, episodes_per_phase: int, n_envs: int = 16,
                 t_max=int(hparams["t_max"]),
                 beta=float(hparams.get("beta", 0.01)))
             state = GA3CTrainer(game, hp, n_envs=n_envs,
-                                seed=seed + hash(str(sorted(hparams.items())))
-                                % 10_000)
+                                seed=trial_seed(seed, hparams))
         metric = state.run_episodes(episodes_per_phase,
                                     max_updates=max_updates)
         return metric, state

@@ -1,0 +1,196 @@
+"""The on-device population engine: single-slot parity with GA3CTrainer,
+device-side eviction masking + hot-swap, the slots-lease ACQUIRE extension,
+and the end-to-end vectorized backend."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.executor import PopulationCluster
+from repro.core.hypertrick import HyperTrick, RandomSearchPolicy
+from repro.core.search_space import (Categorical, LogUniform, SearchSpace,
+                                     paper_rl_space)
+from repro.core.service import OptimizationService
+from repro.population.engine import (LocalDriver, PopulationEngine,
+                                     TrialLease)
+
+HP = {"learning_rate": 3e-4, "gamma": 0.99, "t_max": 8}
+
+
+def _tiny_space(t_max=4):
+    return SearchSpace({"learning_rate": LogUniform(1e-4, 1e-3),
+                        "t_max": Categorical((t_max,)),
+                        "gamma": Categorical((0.99,))})
+
+
+def test_single_slot_parity_bit_for_bit():
+    """A population of one must reproduce the thread backend's GA3CTrainer
+    phase metrics exactly (same seed derivation, same XLA program)."""
+    from repro.rl.ga3c import make_rl_objective
+    objective = make_rl_objective("pong", episodes_per_phase=4, n_envs=4,
+                                  seed=0, max_updates=40)
+    state = None
+    ref = []
+    for phase in range(2):
+        metric, state = objective(HP, phase, state)
+        ref.append(metric)
+
+    policy = RandomSearchPolicy(SearchSpace({}), 1, 2, configs=[dict(HP)])
+    svc = OptimizationService(policy)
+    engine = PopulationEngine("pong", max_slots=1, n_envs=4,
+                              episodes_per_phase=4, max_updates=40, seed=0)
+    records = engine.run(LocalDriver(svc))
+    got = [r[5] for r in sorted(records, key=lambda r: r[2])]
+    assert got == ref                      # bit-for-bit, not approx
+    assert engine.total_updates == state.updates
+
+
+def test_eviction_masks_slot_and_hotswap_reseeds():
+    """An evicted slot's params freeze (masked out of the update) until the
+    next configuration is hot-swapped into the freed slot."""
+    engine = PopulationEngine("pong", max_slots=2, n_envs=2,
+                              episodes_per_phase=10 ** 9, max_updates=10 ** 9,
+                              seed=0)
+    hp0 = {"learning_rate": 1e-3, "t_max": 4, "gamma": 0.99}
+    hp1 = {"learning_rate": 2e-3, "t_max": 4, "gamma": 0.995}
+    engine.admit(TrialLease(0, hp0))
+    engine.admit(TrialLease(1, hp1))
+    bucket = engine.buckets[4]
+    assert bucket.capacity == 2 and bucket.n_active == 2
+
+    bucket.step()
+    frozen = jax.tree.map(lambda x: np.asarray(x[0]), bucket.params)
+    bucket.release(0)                      # eviction = device-side mask
+    assert bucket.n_active == 1
+    bucket.step()
+    after = jax.tree.map(lambda x: np.asarray(x[0]), bucket.params)
+    live = jax.tree.map(lambda x: np.asarray(x[1]), bucket.params)
+    for a, b in zip(jax.tree.leaves(frozen), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a, b)   # masked slot did not train
+
+    # hot-swap the next configuration into the freed slot
+    hp2 = {"learning_rate": 5e-4, "t_max": 4, "gamma": 0.99}
+    engine.admit(TrialLease(2, hp2))
+    assert bucket.n_active == 2
+    assert bucket.meta[0].trial_id == 2
+    reseeded = jax.tree.map(lambda x: np.asarray(x[0]), bucket.params)
+    deltas = [np.abs(a - b).max() for a, b in
+              zip(jax.tree.leaves(reseeded), jax.tree.leaves(frozen))]
+    assert max(deltas) > 0                 # fresh init, not the old params
+    bucket.step()                          # swapped slot trains again
+    trained = jax.tree.map(lambda x: np.asarray(x[0]), bucket.params)
+    deltas = [np.abs(a - b).max() for a, b in
+              zip(jax.tree.leaves(trained), jax.tree.leaves(reseeded))]
+    assert max(deltas) > 0
+    # and the untouched live slot kept training throughout
+    live2 = jax.tree.map(lambda x: np.asarray(x[1]), bucket.params)
+    deltas = [np.abs(a - b).max() for a, b in
+              zip(jax.tree.leaves(live2), jax.tree.leaves(live))]
+    assert max(deltas) > 0
+
+
+def test_tmax_bucketing_and_growth():
+    """Distinct t_max values land in distinct buckets; same t_max shares a
+    bucket, growing it as needed."""
+    engine = PopulationEngine("pong", max_slots=3, n_envs=2,
+                              episodes_per_phase=10 ** 9, max_updates=10 ** 9,
+                              seed=0)
+    engine._admit_grouped(
+        [TrialLease(0, {"learning_rate": 1e-3, "t_max": 4, "gamma": 0.99}),
+         TrialLease(1, {"learning_rate": 1e-3, "t_max": 8, "gamma": 0.99}),
+         TrialLease(2, {"learning_rate": 2e-3, "t_max": 4, "gamma": 0.99})],
+        now=0.0)
+    assert sorted(engine.buckets) == [4, 8]
+    assert engine.buckets[4].capacity == 2
+    assert engine.buckets[8].capacity == 1
+    assert engine.n_active == 3
+    for bucket in engine.buckets.values():
+        bucket.step()                      # both shapes compile and run
+    assert engine.active_trial_ids() == [0, 2, 1] or \
+        sorted(engine.active_trial_ids()) == [0, 1, 2]
+
+
+def test_vectorized_hypertrick_end_to_end():
+    """A full (tiny) HyperTrick search on the vectorized backend produces
+    the same summary schema as every other backend."""
+    policy = HyperTrick(paper_rl_space(), 4, 2, 0.25, seed=0)
+    res = PopulationCluster(4, game="pong", episodes_per_phase=2, n_envs=4,
+                            max_updates=10, seed=0).run(policy)
+    s = res.summary()
+    assert s["n_trials"] == 4
+    assert s["best_metric"] is not None
+    assert res.env_steps and res.env_steps > 0
+    assert all(r.metric == r.metric for r in res.records)  # no NaN scores
+
+
+# ---------------------------------------------------------------------------
+# the slots-lease ACQUIRE extension
+# ---------------------------------------------------------------------------
+def _server(n_trials=5, n_phases=2, lease_ttl=10.0):
+    from repro.distributed.server import MetaoptServer
+    policy = RandomSearchPolicy(_tiny_space(), n_trials, n_phases, seed=0)
+    svc = OptimizationService(policy)
+    return MetaoptServer(svc, lease_ttl=lease_ttl), svc
+
+
+def test_acquire_slots_batches_leases():
+    from repro.distributed.client import ServiceClient
+    server, svc = _server(n_trials=5)
+    with server:
+        with ServiceClient(server.host, server.port) as client:
+            batch = client.acquire_batch(slots=3)
+            assert [t.trial_id for t in batch] == [0, 1, 2]
+            # each batched lease is live: heartbeats renew all of them
+            for t in batch:
+                assert client.heartbeat(t.trial_id)
+            # a short batch when the budget runs out
+            rest = client.acquire_batch(slots=10)
+            assert [t.trial_id for t in rest] == [3, 4]
+
+
+def test_acquire_without_slots_still_works():
+    """Old clients (no ``slots`` field on the wire at all) keep working,
+    and unknown fields from newer peers are ignored."""
+    from repro.distributed import protocol as proto
+    from repro.distributed.client import ServiceClient
+
+    # an old-style frame: hand-built JSON without the slots field
+    msg = proto.decode(json.dumps({"type": "acquire", "node": 7}).encode())
+    assert msg.slots == 1 and msg.node == 7
+    # a frame from a FUTURE peer with fields we don't know yet
+    msg = proto.decode(json.dumps({"type": "acquire", "node": 1,
+                                   "slots": 2, "priority": "high"}).encode())
+    assert msg.slots == 2
+    # a single-trial response must not carry the batch field at all: a
+    # pre-slots client's strict decode would reject the unknown key
+    wire = proto.encode(proto.AcquireResponse(0, {"x": 1.0}, 2))[4:]
+    assert "batch" not in json.loads(wire.decode())
+
+    server, svc = _server(n_trials=2)
+    with server:
+        with ServiceClient(server.host, server.port) as client:
+            trial = client.acquire()        # classic single-trial verb
+            assert trial.trial_id == 0 and trial.n_phases == 2
+            assert client.report(trial.trial_id, 0, 0.5) == "continue"
+            assert client.report(trial.trial_id, 1, 0.6) == "stop"
+    assert svc.db.trials[0].status.value == "completed"
+
+
+def test_population_worker_drains_search_over_tcp():
+    """One multi-slot worker process-equivalent (in-thread here) leases the
+    whole budget via slots and completes every trial."""
+    from repro.distributed.client import ServiceClient
+    from repro.population.worker import PopulationWorkerAgent
+    server, svc = _server(n_trials=3, n_phases=2)
+    with server:
+        engine = PopulationEngine("pong", max_slots=3, n_envs=2,
+                                  episodes_per_phase=2, max_updates=10,
+                                  seed=0)
+        with ServiceClient(server.host, server.port) as client:
+            agent = PopulationWorkerAgent(client, engine,
+                                          heartbeat_interval=0.5)
+            n_reports = agent.run()
+    assert n_reports == 6                  # 3 trials x 2 phases
+    statuses = {t.status.value for t in svc.db.trials.values()}
+    assert statuses == {"completed"}
