@@ -10,7 +10,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
+import subprocess
 import sys
 import time
 
@@ -30,14 +32,39 @@ def _suites(fast: bool):
     ]
     if not fast:
         from benchmarks import population_benches as pb
+        from benchmarks import sharded_benches as shb
         suites += [
             ("ga3c_throughput", sb.bench_ga3c_throughput),
             ("lm_train_step", sb.bench_lm_train_step),
             ("metaopt_rl_real", mb.bench_metaopt_rl_real),
             ("backend_overhead", mb.bench_backend_overhead),  # distributed
             ("population_throughput", pb.bench_population_throughput),
+            ("sharded_population", shb.bench_sharded_population),
         ]
     return suites
+
+
+def _env_meta() -> dict:
+    """Attribution for the perf trajectory: which commit, which jax, how
+    many devices. Each field degrades to None rather than failing the
+    bench run."""
+    meta = {"git_sha": None, "jax_version": None, "device_count": None,
+            "backend": None}
+    try:
+        meta["git_sha"] = subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            stderr=subprocess.DEVNULL).strip()
+    except Exception:  # noqa: BLE001
+        pass
+    try:
+        import jax
+        meta["jax_version"] = jax.__version__
+        meta["device_count"] = jax.device_count()
+        meta["backend"] = jax.default_backend()
+    except Exception:  # noqa: BLE001
+        pass
+    return meta
 
 
 def main() -> None:
@@ -73,6 +100,7 @@ def main() -> None:
             "platform": platform.platform(),
             "python": platform.python_version(),
             "argv": sys.argv[1:],
+            **_env_meta(),
             "rows": all_rows,
         }
         with open(args.json, "w") as f:

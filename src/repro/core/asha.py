@@ -15,6 +15,15 @@ from repro.core.search_space import SearchSpace
 from repro.core.service import AsyncPolicy, Decision
 
 
+def rung_phases(n_phases: int, eta: int) -> list:
+    """Rung placement shared by ASHA and the population engine's on-device
+    successive-halving mode: rungs at phase indices eta^0-1, eta^1-1, ...
+    (the final phase completes unconditionally and is never a rung)."""
+    return sorted({min(eta ** i, n_phases) - 1
+                   for i in range(0, 1 + max(1, int(
+                       math.log(max(n_phases, 1), eta)) + 1))})
+
+
 class ASHA(AsyncPolicy):
     def __init__(self, space: SearchSpace, n_trials: int, n_phases: int,
                  eta: int = 3, seed: int = 0, configs: Optional[list] = None):
@@ -25,11 +34,8 @@ class ASHA(AsyncPolicy):
         self.rng = np.random.default_rng(seed)
         self._configs = list(configs) if configs is not None else None
         self._launched = 0
-        # rungs at phase indices eta^0-1, eta^1-1, ... (report counts gate
-        # promotion; the final phase completes unconditionally)
-        self.rungs = sorted({min(self.eta ** i, n_phases) - 1
-                             for i in range(0, 1 + max(1, int(
-                                 math.log(max(n_phases, 1), eta)) + 1))})
+        # report counts gate promotion at each rung
+        self.rungs = rung_phases(n_phases, eta)
 
     def next_hparams(self):
         if self._launched >= self.n_trials:

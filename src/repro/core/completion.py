@@ -78,6 +78,34 @@ def paper_brackets() -> List[Bracket]:
     ]
 
 
+def demotion_bracket(n0: int, eta: int, rungs: List[int],
+                     n_phases: int) -> Bracket:
+    """The bracket realized by the population engine's demote-bottom-1/eta
+    rungs: starting from ``n0`` slots, each rung at phase index ``p`` frees
+    the bottom ``n_i // eta`` and refills them with fresh configurations, so
+    the *cohort* shrinks by ``n_i // eta`` per rung. ``r`` is phases-per-rung
+    (phase index + 1), with the full ``n_phases`` as the final resource —
+    the same (n, r) accounting as ``hyperband_brackets`` so ``.alpha``
+    compares directly against Table 2."""
+    n = [n0]
+    for _ in rungs:
+        n.append(max(1, n[-1] - n[-1] // eta))
+    r = [p + 1 for p in rungs] + [n_phases]
+    return Bracket(s=len(rungs), n=n, r=r)
+
+
+def demotion_alpha(bracket: Bracket) -> float:
+    """Expected completion rate of a *continuation* demotion bracket: the
+    engine never restarts a survivor, so each round's incremental work is
+    n_i (r_i - r_{i-1}) phases — unlike ``Bracket.alpha``, which uses the
+    paper's restart accounting where r_i is paid in full per round."""
+    work, prev = 0, 0
+    for ni, ri in zip(bracket.n, bracket.r):
+        work += ni * (ri - prev)
+        prev = ri
+    return work / (bracket.n[0] * bracket.r[-1]) if bracket.n else 0.0
+
+
 def hyperband_alpha(brackets: List[Bracket]) -> float:
     """Total alpha = sum_s work_s / sum_s (n_{0,s} R)."""
     work = sum(b.work for b in brackets)

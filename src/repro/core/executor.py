@@ -50,6 +50,9 @@ class ExecResult:
     n_nodes: int
     # backends that can count device work report it (population engine)
     env_steps: Optional[int] = None
+    # backend-specific summary fields (e.g. the population engine's rung
+    # log and device count), merged into summary()
+    extra: Optional[Dict] = None
 
     @property
     def occupancy(self) -> float:
@@ -62,6 +65,8 @@ class ExecResult:
                  occupancy=round(self.occupancy, 3),
                  alpha=round(self.service.db.completion_rate(
                      self.service.policy.n_phases), 4))
+        if self.extra:
+            s.update(self.extra)
         return s
 
 
@@ -205,34 +210,59 @@ class PopulationCluster:
     RL objectives only (the engine vmaps the GA3C train step); ``slots``
     defaults to the policy's initial worker count W0 so the entire
     population is in flight from the first step.
+
+    ``devices > 1`` shards every bucket's slot axis across that many
+    accelerator devices via ``shard_map`` over a
+    ``make_population_mesh(devices, 1)`` mesh (testable on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    ``bracket_eta`` turns on the engine's successive-halving rungs: rung
+    phases become generation barriers at which the bottom 1/eta of each
+    cohort is demoted by mask and the freed slots are hot-swapped.
     """
 
     def __init__(self, slots: Optional[int] = None, *, game: str = "pong",
                  episodes_per_phase: int = 60, n_envs: int = 16,
-                 max_updates: int = 2000, seed: int = 0):
+                 max_updates: int = 2000, seed: int = 0, devices: int = 1,
+                 bracket_eta: Optional[int] = None):
         self.slots = slots
         self.game = game
         self.episodes_per_phase = episodes_per_phase
         self.n_envs = n_envs
         self.max_updates = max_updates
         self.seed = seed
+        self.devices = devices
+        self.bracket_eta = bracket_eta
 
     def run(self, policy: AsyncPolicy) -> ExecResult:
         from repro.population.engine import LocalDriver, PopulationEngine
         slots = self.slots or getattr(policy, "w0", None) \
             or getattr(policy, "n_trials", None) or 8
+        mesh = None
+        if self.devices > 1:
+            from repro.launch.mesh import make_population_mesh
+            mesh = make_population_mesh(self.devices, 1)
         svc = OptimizationService(policy)
         engine = PopulationEngine(
             self.game, max_slots=slots, n_envs=self.n_envs,
             episodes_per_phase=self.episodes_per_phase,
-            max_updates=self.max_updates, seed=self.seed)
+            max_updates=self.max_updates, seed=self.seed, mesh=mesh,
+            bracket_eta=self.bracket_eta)
         t0 = time.monotonic()
         rows = engine.run(LocalDriver(svc))
         wall = time.monotonic() - t0
         records = [ExecRecord(tid, slot, phase, ts, te, metric)
                    for tid, slot, phase, ts, te, metric in rows]
+        extra: Dict = {"devices": self.devices}
+        if engine.rung_log:
+            from repro.core.completion import demotion_alpha, demotion_bracket
+            extra["rungs"] = engine.rung_log
+            br = demotion_bracket(slots, self.bracket_eta,
+                                  sorted(engine._rung_set or ()),
+                                  policy.n_phases)
+            extra["bracket"] = {"n": br.n, "r": br.r}
+            extra["bracket_alpha"] = round(demotion_alpha(br), 4)
         return ExecResult(svc, records, wall, slots,
-                          env_steps=engine.total_env_steps)
+                          env_steps=engine.total_env_steps, extra=extra)
 
 
 class SyncCluster:

@@ -226,6 +226,15 @@ class OptimizationService:
         with self._lock:
             self.db.set_status(trial_id, TrialStatus.CRASHED, self.clock())
 
+    def stop_trial(self, trial_id: int):
+        """Executor-driven eviction (the population engine's rung demotion):
+        mark a RUNNING trial KILLED — same terminal status a policy STOP
+        decision produces, but decided outside ``on_report``."""
+        with self._lock:
+            rec = self.db.trials[trial_id]
+            if rec.status is TrialStatus.RUNNING:
+                self.db.set_status(trial_id, TrialStatus.KILLED, self.clock())
+
     def replay(self, events: List[dict],
                reclaim_running: bool = True) -> List[TrialRecord]:
         """Rebuild full service state (db, id counter, policy budget

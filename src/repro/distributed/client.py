@@ -75,10 +75,11 @@ class ServiceClient:
 
     def report(self, trial_id: int, phase: int, metric: float,
                t_start: float = 0.0, t_end: float = 0.0,
-               node: Optional[int] = None) -> str:
+               node: Optional[int] = None, demote: bool = False) -> str:
         resp = self._call(proto.ReportRequest(
             trial_id=trial_id, phase=phase, metric=float(metric),
-            t_start=t_start, t_end=t_end, node=node))
+            t_start=t_start, t_end=t_end, node=node,
+            demote=True if demote else None))
         return resp.decision
 
     def heartbeat(self, trial_id: int) -> bool:

@@ -52,6 +52,13 @@ class ReportRequest:
     t_start: float = 0.0              # worker-side wall-clock offsets
     t_end: float = 0.0
     node: Optional[int] = None
+    # rung demotion (population engine --bracket): record the metric AND
+    # kill the trial in one round-trip. Omitted when None so the frame is
+    # byte-identical to a classic report; an old server that predates the
+    # field ignores it (the trial merely survives the rung — degraded, not
+    # broken).
+    demote: Optional[bool] = None
+    OMIT_IF_NONE = ("demote",)
 
 
 @message("heartbeat")

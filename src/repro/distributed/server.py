@@ -15,7 +15,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.service import OptimizationService, TrialStatus
+from repro.core.service import Decision, OptimizationService, TrialStatus
 from repro.distributed import protocol as proto
 from repro.distributed.journal import Journal
 
@@ -177,6 +177,10 @@ class MetaoptServer:
                 return proto.ReportResponse(decision="stop")
             decision = self.service.report(msg.trial_id, msg.phase,
                                            msg.metric)
+            if getattr(msg, "demote", None):
+                # rung demotion: metric recorded above, trial killed here
+                self.service.stop_trial(msg.trial_id)
+                decision = Decision.STOP
             if decision.value == "stop":
                 self._leases.pop(msg.trial_id, None)
             else:

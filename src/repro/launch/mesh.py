@@ -24,3 +24,38 @@ def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — tests/smokes."""
     return jax.make_mesh((data, model), ("data", "model"),
                          **_axis_type_kwargs(2))
+
+
+def force_host_device_count(n: int) -> None:
+    """Give a CPU-only host ``n`` virtual devices. Must run before jax
+    initializes its backend (importing jax is fine; touching devices is
+    not). A no-op when the flag is already present — an existing smaller
+    count wins, and ``make_population_mesh`` will then fail loudly rather
+    than silently undershard."""
+    import os
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def make_population_mesh(slots: int, data: int = 1):
+    """Mesh for the multi-device population engine: the ``slots`` axis
+    shards a bucket's slot dimension (one trial subset per device), the
+    ``data`` axis is reserved for env-batch data parallelism (currently
+    replicated). Testable on CPU via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    return jax.make_mesh((slots, data), ("slots", "data"),
+                         **_axis_type_kwargs(2))
+
+
+def compat_shard_map(body, mesh, in_specs, out_specs):
+    """jax.shard_map/check_vma only exist on newer jax; 0.4.x spells them
+    jax.experimental.shard_map.shard_map/check_rep."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)

@@ -72,6 +72,22 @@ def main():
                          "(default: --workers); process/server with an RL "
                          "objective: trials leased per worker process "
                          "(default 1 = classic scalar workers)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="vectorized: shard the slot axis across this many "
+                         "devices (shard_map over a slots x data mesh). On "
+                         "a CPU-only host the device count is forced via "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count "
+                         "automatically")
+    ap.add_argument("--bracket", action="store_true",
+                    help="vectorized: on-device successive-halving rungs — "
+                         "rung phases (eta^k - 1) become generation "
+                         "barriers where the bottom 1/eta of each cohort "
+                         "is demoted by mask and freed slots are hot-"
+                         "swapped. The service policy becomes a pure "
+                         "sampler (--policy is ignored); eviction is the "
+                         "engine's")
+    ap.add_argument("--eta", type=int, default=3,
+                    help="rung demotion factor for --bracket (default 3)")
     ap.add_argument("--n-envs", type=int, default=16,
                     help="vectorized envs per trial (vectorized backend)")
     ap.add_argument("--journal", default=None,
@@ -92,12 +108,24 @@ def main():
     else:
         space = synthetic_space()
 
-    if args.policy == "hypertrick":
+    if args.bracket:
+        # engine-side rung demotion needs a pure sampler upstream: the W0
+        # configurations come from the service, every eviction decision is
+        # the engine's on-device ranking
+        policy = RandomSearchPolicy(space, args.workers, args.phases,
+                                    seed=args.seed)
+    elif args.policy == "hypertrick":
         policy = HyperTrick(space, args.workers, args.phases,
                             args.eviction_rate, seed=args.seed)
     else:
         policy = RandomSearchPolicy(space, args.workers, args.phases,
                                     seed=args.seed)
+
+    if args.backend != "vectorized" and (args.devices > 1 or args.bracket):
+        ap.error("--devices/--bracket drive the on-device population "
+                 "engine; use --backend vectorized")
+    if args.bracket and args.eta < 2:
+        ap.error("--eta must be >= 2 (demote bottom 1/eta per rung)")
 
     if args.backend == "vectorized":
         if args.objective != "rl":
@@ -106,10 +134,16 @@ def main():
         if args.resume or args.journal:
             ap.error("--journal/--resume need a socket backend "
                      "(--backend process or server)")
+        if args.devices > 1:
+            # must land before jax initializes its backend (nothing above
+            # touches jax); a no-op on hosts that already have the devices
+            from repro.launch.mesh import force_host_device_count
+            force_host_device_count(args.devices)
         cluster = PopulationCluster(
             args.slots or args.workers, game=args.game,
             episodes_per_phase=args.episodes_per_phase,
-            n_envs=args.n_envs, seed=args.seed)
+            n_envs=args.n_envs, seed=args.seed, devices=args.devices,
+            bracket_eta=args.eta if args.bracket else None)
     elif args.backend == "thread":
         if args.resume or args.journal:
             ap.error("--journal/--resume need a socket backend "

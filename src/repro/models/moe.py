@@ -84,15 +84,9 @@ def moe_local(cfg: ModelConfig, p, x):
 # sharded paths (shard_map)
 # ---------------------------------------------------------------------------
 def _shard_map(body, mesh, in_specs, out_specs):
-    """jax.shard_map/check_vma only exist on newer jax; 0.4.x spells them
-    jax.experimental.shard_map.shard_map/check_rep."""
-    fn = getattr(jax, "shard_map", None)
-    if fn is not None:
-        return fn(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_vma=False)
-    from jax.experimental.shard_map import shard_map as sm
-    return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-              check_rep=False)
+    """Version-compat shard_map; shared with the population engine."""
+    from repro.launch.mesh import compat_shard_map
+    return compat_shard_map(body, mesh, in_specs, out_specs)
 
 
 def _expert_parallel_body(cfg: ModelConfig, e_local: int, capacity: int,

@@ -23,6 +23,25 @@ serves two deployments:
 * ``RemoteDriver``   — wraps the PR-1 TCP ``ServiceClient``, leasing up to
   ``slots`` trials per ACQUIRE so one GPU node serves an entire search
   (``population.worker``).
+
+Two orthogonal extensions ride on the slot axis:
+
+* **Multi-device sharding** — give the engine a mesh from
+  ``launch.mesh.make_population_mesh(slots, data)`` and each bucket's slot
+  axis is split across the ``slots`` mesh axis with ``shard_map``: every
+  device trains its local slice of the population, eviction masks and
+  hot-swaps stay device-side per shard, and no collective is ever needed
+  (trials are independent). Numerics are a function of the *local* (per-
+  shard) slot count only: a sharded run with local capacity c bit-matches
+  an unsharded run of the same trials at capacity c (see
+  tests/test_population_sharded.py).
+* **On-device successive-halving rungs** (``bracket_eta``) — rung phases
+  from ``core.asha.rung_phases`` become generation barriers: a slot that
+  completes a rung phase is *parked* (masked, report withheld); when no
+  slot is left running, the engine ranks each rung cohort's metrics on
+  device, demotes the bottom 1/eta by mask, reports every parked trial
+  (demotions ride the REPORT verb's ``demote`` flag), and hot-swaps
+  promoted survivors or fresh configurations into the slots.
 """
 from __future__ import annotations
 
@@ -46,6 +65,7 @@ from repro.rl.network import A3CNetConfig, apply_net, init_net
 class TrialLease:
     trial_id: int
     hparams: Dict[str, Any]
+    n_phases: Optional[int] = None    # search length, when the driver knows it
 
 
 # ---------------------------------------------------------------------------
@@ -61,17 +81,22 @@ class LocalDriver:
         """Up to ``k`` fresh leases. ``(leases, retry)``: ``retry`` is None
         when an empty result is final (budget spent), else seconds to wait
         before polling again."""
+        n_phases = getattr(self.service.policy, "n_phases", None)
         leases = []
         for slot in range(k):
             rec = self.service.acquire_trial()
             if rec is None:
                 break
-            leases.append(TrialLease(rec.trial_id, rec.hparams))
+            leases.append(TrialLease(rec.trial_id, rec.hparams, n_phases))
         return leases, None
 
     def report(self, trial_id: int, phase: int, metric: float,
-               t_start: float, t_end: float) -> str:
-        return self.service.report(trial_id, phase, metric).value
+               t_start: float, t_end: float, demote: bool = False) -> str:
+        decision = self.service.report(trial_id, phase, metric).value
+        if demote:
+            self.service.stop_trial(trial_id)
+            return "stop"
+        return decision
 
     def poll_lost(self) -> set:
         """Trials whose lease was revoked out from under us (remote only)."""
@@ -97,15 +122,16 @@ class RemoteDriver:
             return [], None
         if isinstance(got, Pending):
             return [], got.retry_after
-        return [TrialLease(t.trial_id, t.hparams) for t in got], None
+        return [TrialLease(t.trial_id, t.hparams, t.n_phases)
+                for t in got], None
 
     def report(self, trial_id: int, phase: int, metric: float,
-               t_start: float, t_end: float) -> str:
+               t_start: float, t_end: float, demote: bool = False) -> str:
         from repro.distributed.client import ServiceError
         try:
             return self.client.report(trial_id, phase, metric,
                                       t_start=t_start, t_end=t_end,
-                                      node=self.node)
+                                      node=self.node, demote=demote)
         except ServiceError:
             # stale trial (server restarted / lease reaped between our
             # heartbeat and this report): strictly local effect — drop the
@@ -134,15 +160,21 @@ class SlotMeta:
     phase_t0: float = 0.0
     start_sum: float = 0.0
     start_n: float = 0.0
+    # rung mode: (metric, t_start, t_end) of a completed rung phase whose
+    # report is withheld until the generation barrier resolves
+    pending: Optional[Tuple[float, float, float]] = None
 
 
 class Bucket:
     """All slots sharing one structural ``t_max``: stacked pytrees with a
-    leading axis of ``capacity``, one compiled train step."""
+    leading axis of ``capacity``, one compiled train step. Under a mesh the
+    capacity is always a multiple of the ``slots`` axis size and the slot
+    axis is sharded across it (padding slots are just inactive masks)."""
 
     def __init__(self, engine: "PopulationEngine", t_max: int, capacity: int):
         self.engine = engine
         self.t_max = t_max
+        capacity = engine._round_capacity(capacity)
         self.capacity = capacity
         tmpl_p = init_net(engine.net_cfg, jax.random.PRNGKey(0))
         tmpl = (tmpl_p, init_opt_state(engine.tc, tmpl_p),
@@ -150,7 +182,7 @@ class Bucket:
                                 jax.random.PRNGKey(0)))
         zeros = lambda x: jnp.zeros((capacity,) + x.shape, x.dtype)
         self.params, self.opt_state, self.loop = (
-            jax.tree.map(zeros, t) for t in tmpl)
+            engine._place(jax.tree.map(zeros, t)) for t in tmpl)
         self.lr = np.zeros(capacity, np.float32)
         self.gamma = np.zeros(capacity, np.float32)
         self.beta = np.zeros(capacity, np.float32)
@@ -159,12 +191,12 @@ class Bucket:
         self.meta: List[Optional[SlotMeta]] = [None] * capacity
         self.slot_ids = [engine._new_slot_id() for _ in range(capacity)]
         self._step = _bucket_step(engine.game, t_max, capacity,
-                                  engine.n_envs)
+                                  engine.n_envs, engine.mesh)
 
     # -- slot management ----------------------------------------------------
     def free_index(self) -> Optional[int]:
         for i in range(self.capacity):
-            if not self.active[i]:
+            if not self.active[i] and self.meta[i] is None:
                 return i
         return None
 
@@ -172,13 +204,19 @@ class Bucket:
     def n_active(self) -> int:
         return int(self.active.sum())
 
+    @property
+    def n_occupied(self) -> int:
+        """Active + parked slots (a parked trial still owns its slot)."""
+        return sum(1 for m in self.meta if m is not None)
+
     def grow(self, new_capacity: int) -> None:
+        new_capacity = self.engine._round_capacity(new_capacity)
         pad = new_capacity - self.capacity
         assert pad > 0
         padz = lambda x: jnp.concatenate(
             [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
         self.params, self.opt_state, self.loop = (
-            jax.tree.map(padz, t)
+            self.engine._place(jax.tree.map(padz, t))
             for t in (self.params, self.opt_state, self.loop))
         for name in ("lr", "gamma", "beta"):
             setattr(self, name, np.concatenate(
@@ -189,15 +227,17 @@ class Bucket:
         self.slot_ids += [self.engine._new_slot_id() for _ in range(pad)]
         self.capacity = new_capacity
         self._step = _bucket_step(self.engine.game, self.t_max, new_capacity,
-                                  self.engine.n_envs)
+                                  self.engine.n_envs, self.engine.mesh)
 
     def write_slot(self, i: int, meta: SlotMeta, params, opt_state, loop,
                    lr: float, gamma: float, beta: float) -> None:
         """Hot-swap a fresh configuration into slot ``i``."""
+        place = self.engine._place
         setter = lambda a, v: a.at[i].set(v)
-        self.params = jax.tree.map(setter, self.params, params)
-        self.opt_state = jax.tree.map(setter, self.opt_state, opt_state)
-        self.loop = jax.tree.map(setter, self.loop, loop)
+        self.params = place(jax.tree.map(setter, self.params, params))
+        self.opt_state = place(jax.tree.map(setter, self.opt_state,
+                                            opt_state))
+        self.loop = place(jax.tree.map(setter, self.loop, loop))
         self.lr[i], self.gamma[i], self.beta[i] = lr, gamma, beta
         self.active[i] = True
         self.meta[i] = meta
@@ -210,12 +250,23 @@ class Bucket:
         self.meta[i] = None
         self._hyper_dev = None
 
+    def park(self, i: int) -> None:
+        """Rung barrier: mask the slot but keep the trial — params, opt
+        state, and env state stay frozen on device until the generation
+        resolves and the survivor is unparked (promoted)."""
+        self.active[i] = False
+        self._hyper_dev = None
+
+    def unpark(self, i: int) -> None:
+        self.active[i] = True
+        self._hyper_dev = None
+
     # -- the one jitted step ------------------------------------------------
     def step(self) -> None:
         if self._hyper_dev is None:
-            self._hyper_dev = tuple(jnp.asarray(a) for a in
-                                    (self.lr, self.gamma, self.beta,
-                                     self.active))
+            self._hyper_dev = tuple(
+                self.engine._place(jnp.asarray(a)) for a in
+                (self.lr, self.gamma, self.beta, self.active))
         self.params, self.opt_state, self.loop = self._step(
             self.params, self.opt_state, self.loop, *self._hyper_dev)
 
@@ -228,7 +279,8 @@ UNROLL_T_MAX = 16
 
 
 @functools.lru_cache(maxsize=64)
-def _bucket_step(game: str, t_max: int, capacity: int, n_envs: int):
+def _bucket_step(game: str, t_max: int, capacity: int, n_envs: int,
+                 mesh=None):
     """One jitted, buffer-donating train step for a whole bucket, cached at
     module level: hyperparameters are traced inputs, so ONE compilation
     serves every configuration that ever occupies the bucket — per-trial
@@ -238,12 +290,24 @@ def _bucket_step(game: str, t_max: int, capacity: int, n_envs: int):
 
     The per-slot body is *exactly* the ``GA3CTrainer`` train step, with the
     continuous hyperparameters as traced scalars instead of baked
-    constants. ``capacity == 1`` skips vmap and keeps the trainer's compact
-    rollout scan, so a single-trial population is the same XLA program as
-    the thread backend (bit-for-bit parity)."""
+    constants. A local capacity of 1 skips vmap and keeps the trainer's
+    compact rollout scan, so a single-trial population is the same XLA
+    program as the thread backend (bit-for-bit parity).
+
+    With a ``mesh`` (from ``make_population_mesh``) the step body runs
+    under ``shard_map`` with the slot axis split over the mesh's ``slots``
+    axis: each device owns ``capacity // n_shards`` slots and runs the
+    identical per-shard program — vmap, unroll choice, and the eviction
+    mask all act on the *local* slice, and since trials are independent no
+    collective appears anywhere. Numerics therefore depend only on the
+    local capacity: D devices at local capacity c bit-match one device at
+    capacity c."""
     env = make_env(game)
     tc = ga3c_train_config(3e-4)       # lr comes in traced, not from here
-    unroll = t_max if (capacity > 1 and t_max <= UNROLL_T_MAX) else 1
+    n_shards = int(mesh.shape["slots"]) if mesh is not None else 1
+    assert capacity % n_shards == 0, (capacity, n_shards)
+    local_cap = capacity // n_shards
+    unroll = t_max if (local_cap > 1 and t_max <= UNROLL_T_MAX) else 1
 
     def one(params, opt_state, loop, lr, gamma, beta):
         traj, new_loop = rollout(env, params, loop, t_max, unroll=unroll)
@@ -256,7 +320,7 @@ def _bucket_step(game: str, t_max: int, capacity: int, n_envs: int):
                                              lr=lr)
         return params, opt_state, new_loop
 
-    if capacity == 1:
+    if local_cap == 1:
         def batched(params, opt_state, loop, lr, gamma, beta):
             squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
             out = one(squeeze(params), squeeze(opt_state), squeeze(loop),
@@ -268,10 +332,16 @@ def _bucket_step(game: str, t_max: int, capacity: int, n_envs: int):
     def step(params, opt_state, loop, lr, gamma, beta, active):
         new = batched(params, opt_state, loop, lr, gamma, beta)
         def keep_active(n, o):
-            mask = active.reshape((capacity,) + (1,) * (n.ndim - 1))
+            mask = active.reshape((active.shape[0],) + (1,) * (n.ndim - 1))
             return jnp.where(mask, n, o)
         return tuple(jax.tree.map(keep_active, n, o)
                      for n, o in zip(new, (params, opt_state, loop)))
+
+    if mesh is not None:
+        from jax.sharding import PartitionSpec
+        from repro.launch.mesh import compat_shard_map
+        spec = PartitionSpec("slots")
+        step = compat_shard_map(step, mesh, (spec,) * 7, (spec,) * 3)
 
     return jax.jit(step, donate_argnums=(0, 1, 2))
 
@@ -291,7 +361,7 @@ class PopulationEngine:
 
     def __init__(self, game: str, *, max_slots: int, n_envs: int = 16,
                  episodes_per_phase: int = 60, max_updates: int = 2000,
-                 seed: int = 0):
+                 seed: int = 0, mesh=None, bracket_eta: Optional[int] = None):
         self.game = game
         self.env = make_env(game)
         self.net_cfg = A3CNetConfig(grid=self.env.spec.grid,
@@ -304,11 +374,42 @@ class PopulationEngine:
         self.episodes_per_phase = episodes_per_phase
         self.max_updates = max_updates
         self.seed = seed
+        # multi-device: slot axes sharded over mesh.shape["slots"] devices.
+        # Stacked state is COMMITTED to the slot sharding (device_put at
+        # creation / growth / hot-swap): feeding uncommitted arrays into
+        # the sharded step makes XLA reshard the whole state every call —
+        # measured ~10x slower than committed inputs on CPU.
+        self.mesh = mesh
+        self.n_shards = int(mesh.shape["slots"]) if mesh is not None else 1
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._sharding = NamedSharding(mesh, PartitionSpec("slots"))
+        else:
+            self._sharding = None
+        # on-device successive halving: rung phases become generation
+        # barriers, bottom 1/eta demoted per rung cohort
+        assert bracket_eta is None or bracket_eta >= 2, bracket_eta
+        self.bracket_eta = bracket_eta
+        self._rung_set: Optional[set] = None   # learned with n_phases
+        self.rung_log: List[dict] = []
         self.buckets: Dict[int, Bucket] = {}
         self.total_env_steps = 0       # active-lane env transitions
         self.total_updates = 0
         self._slot_counter = 0
         self.records: List[Tuple] = []  # (trial_id, slot, phase, t0, t1, m)
+
+    def _place(self, tree):
+        """Commit a stacked pytree to the slot sharding (no-op unsharded or
+        when already correctly placed)."""
+        if self._sharding is None:
+            return tree
+        return jax.device_put(tree, self._sharding)
+
+    def _round_capacity(self, capacity: int) -> int:
+        """Smallest multiple of the shard count >= capacity, so the slot
+        axis always splits evenly across the mesh (pad slots stay masked)."""
+        s = self.n_shards
+        return -(-capacity // s) * s
 
     def _new_slot_id(self) -> int:
         self._slot_counter += 1
@@ -318,19 +419,39 @@ class PopulationEngine:
     def n_active(self) -> int:
         return sum(b.n_active for b in self.buckets.values())
 
+    @property
+    def n_occupied(self) -> int:
+        """Active + parked: slots that cannot take a fresh configuration."""
+        return sum(b.n_occupied for b in self.buckets.values())
+
     def active_trial_ids(self) -> List[int]:
-        """Snapshot of live trial ids. Called from the worker's heartbeat
-        thread while the engine mutates buckets: every container is copied
-        in one C-level call (atomic under the GIL) before iterating."""
+        """Snapshot of live trial ids (parked trials included — they still
+        hold leases that heartbeats must renew). Called from the worker's
+        heartbeat thread while the engine mutates buckets: every container
+        is copied in one C-level call (atomic under the GIL) before
+        iterating."""
         out = []
         for b in list(self.buckets.values()):
-            for m, a in zip(list(b.meta), list(b.active)):
-                if a and m is not None:
+            for m in list(b.meta):
+                if m is not None:
                     out.append(m.trial_id)
         return out
 
     # -- admission ----------------------------------------------------------
+    def _learn_rungs(self, lease: TrialLease) -> None:
+        """Rung placement needs the search length; the driver delivers it
+        with the first lease (policy.n_phases locally, ACQUIRE's n_phases
+        over the wire)."""
+        if (self.bracket_eta is None or self._rung_set is not None
+                or not lease.n_phases):
+            return
+        from repro.core.asha import rung_phases
+        self._rung_set = {p for p in rung_phases(lease.n_phases,
+                                                 self.bracket_eta)
+                          if p < lease.n_phases - 1}
+
     def admit(self, lease: TrialLease, now: float = 0.0) -> None:
+        self._learn_rungs(lease)
         hp = lease.hparams
         t_max = int(hp.get("t_max", 8))
         bucket = self.buckets.get(t_max)
@@ -361,7 +482,7 @@ class PopulationEngine:
                                []).append(lease)
         for t_max, group in by_tmax.items():
             bucket = self.buckets.get(t_max)
-            free = (bucket.capacity - bucket.n_active) if bucket else 0
+            free = (bucket.capacity - bucket.n_occupied) if bucket else 0
             need = len(group) - free
             if bucket is None:
                 self.buckets[t_max] = Bucket(self, t_max, len(group))
@@ -377,10 +498,10 @@ class PopulationEngine:
         retry_at = 0.0
         while True:
             now = time.monotonic()
-            if (not exhausted and self.n_active < self.max_slots
+            if (not exhausted and self.n_occupied < self.max_slots
                     and now >= retry_at):
                 leases, retry = driver.acquire_many(
-                    self.max_slots - self.n_active)
+                    self.max_slots - self.n_occupied)
                 if leases:
                     self._admit_grouped(leases, now - t0)
                 elif retry is None:
@@ -390,6 +511,10 @@ class PopulationEngine:
             lost = driver.poll_lost()
             if lost:
                 self._abandon(lost)
+            if self.n_active == 0 and self._any_parked():
+                # generation barrier: nothing left running, rank the rung
+                # cohorts, demote, promote, free slots
+                self._resolve_rungs(driver, t0)
             if self.n_active == 0:
                 if exhausted:
                     break
@@ -421,6 +546,12 @@ class PopulationEngine:
                     continue
                 score = (float(fin_sum[i]) - meta.start_sum) / max(n, 1.0)
                 t_now = time.monotonic() - t0
+                if self._rung_set and meta.phase in self._rung_set:
+                    # rung phase: withhold the report, park the slot until
+                    # the generation barrier ranks the cohort
+                    meta.pending = (score, meta.phase_t0, t_now)
+                    bucket.park(i)
+                    continue
                 decision = driver.report(meta.trial_id, meta.phase, score,
                                          meta.phase_t0, t_now)
                 self.records.append((meta.trial_id, meta.slot_id, meta.phase,
@@ -433,6 +564,69 @@ class PopulationEngine:
                     meta.start_n = float(fin_n[i])
                     meta.start_sum = float(fin_sum[i])
                     meta.phase_t0 = t_now
+
+    # -- rung barriers (on-device successive halving) -----------------------
+    def _any_parked(self) -> bool:
+        return any(m is not None and not b.active[i]
+                   for b in self.buckets.values()
+                   for i, m in enumerate(b.meta))
+
+    def _resolve_rungs(self, driver, t0: float) -> None:
+        """Rank each rung cohort, demote the bottom ``1/eta`` of it, report
+        every parked trial (demotions ride the report's ``demote`` flag),
+        and unpark the survivors into their next phase. Freed slots are
+        hot-swapped with fresh configurations by the admission path on the
+        next loop iteration."""
+        cohorts: Dict[int, List[Tuple[Bucket, int, SlotMeta]]] = {}
+        for bucket in self.buckets.values():
+            for i, meta in enumerate(bucket.meta):
+                if meta is not None and not bucket.active[i] \
+                        and meta.pending is not None:
+                    cohorts.setdefault(meta.phase, []).append(
+                        (bucket, i, meta))
+        counters: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        for phase in sorted(cohorts):
+            group = cohorts[phase]
+            # the ranking itself runs on device: one argsort over the
+            # cohort's metrics (ties broken by admission order — argsort
+            # is stable)
+            metrics = jnp.asarray([m.pending[0] for _, _, m in group],
+                                  jnp.float32)
+            order = np.asarray(jnp.argsort(metrics))
+            n_demote = len(group) // self.bracket_eta
+            demoted_j = set(order[:n_demote].tolist())
+            demoted, promoted, stopped = [], [], []
+            for j, (bucket, i, meta) in enumerate(group):
+                score, ts, te = meta.pending
+                dem = j in demoted_j
+                decision = driver.report(meta.trial_id, meta.phase, score,
+                                         ts, te, demote=dem)
+                self.records.append((meta.trial_id, meta.slot_id, meta.phase,
+                                     ts, te, score))
+                if dem or decision == "stop":
+                    # a survivor the driver stopped anyway (stale lease,
+                    # policy stop) is logged apart from the rung demotions
+                    (demoted if dem else stopped).append(meta.trial_id)
+                    bucket.release(i)
+                    continue
+                promoted.append(meta.trial_id)
+                if bucket.t_max not in counters:
+                    counters[bucket.t_max] = (
+                        np.asarray(bucket.loop.finished_n),
+                        np.asarray(bucket.loop.finished_sum))
+                fin_n, fin_sum = counters[bucket.t_max]
+                meta.pending = None
+                meta.phase += 1
+                meta.updates_in_phase = 0
+                meta.start_n = float(fin_n[i])
+                meta.start_sum = float(fin_sum[i])
+                meta.phase_t0 = time.monotonic() - t0
+                bucket.unpark(i)
+            entry = {"phase": phase, "n": len(group),
+                     "demoted": demoted, "promoted": promoted}
+            if stopped:
+                entry["stopped"] = stopped
+            self.rung_log.append(entry)
 
     def _abandon(self, trial_ids: set) -> None:
         for bucket in self.buckets.values():

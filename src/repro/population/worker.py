@@ -75,12 +75,34 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--node", type=int, default=None)
     ap.add_argument("--heartbeat-interval", type=float, default=2.0)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the slot axis across this many local "
+                         "devices (shard_map); forces the CPU device count "
+                         "via XLA_FLAGS on CPU-only hosts")
+    ap.add_argument("--bracket", action="store_true",
+                    help="on-device successive-halving rungs (bottom 1/eta "
+                         "of each rung cohort demoted; demotions ride the "
+                         "REPORT verb's demote flag)")
+    ap.add_argument("--eta", type=int, default=3)
     args = ap.parse_args(argv)
+
+    if args.bracket and args.eta < 2:
+        ap.error("--eta must be >= 2 (demote bottom 1/eta per rung)")
+    mesh = None
+    if args.devices > 1:
+        # jax is imported but its backend is not initialized until the
+        # first device lookup, so forcing the flag here still works
+        from repro.launch.mesh import (force_host_device_count,
+                                       make_population_mesh)
+        force_host_device_count(args.devices)
+        mesh = make_population_mesh(args.devices, 1)
 
     engine = PopulationEngine(args.game, max_slots=args.slots,
                               n_envs=args.n_envs,
                               episodes_per_phase=args.episodes_per_phase,
-                              max_updates=args.max_updates, seed=args.seed)
+                              max_updates=args.max_updates, seed=args.seed,
+                              mesh=mesh,
+                              bracket_eta=args.eta if args.bracket else None)
     try:
         client = ServiceClient(args.host, args.port)
     except OSError as e:

@@ -1,0 +1,63 @@
+"""Markdown link check for README.md and docs/ — every relative link and
+anchor target must exist so docs can't rot silently. Stdlib only (runs in
+the CI docs job before any heavy dependency is installed).
+
+  python tools/check_links.py [root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def md_files(root: str):
+    yield os.path.join(root, "README.md")
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        for name in sorted(os.listdir(docs)):
+            if name.endswith(".md"):
+                yield os.path.join(docs, name)
+
+
+def check_file(path: str, root: str) -> list:
+    errors = []
+    text = open(path, encoding="utf-8").read()
+    # strip fenced code blocks: their brackets/parens are not links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue                       # external: not checked offline
+        target = target.split("#")[0]
+        if not target:
+            continue                       # pure in-page anchor
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), target))
+        if not os.path.exists(resolved):
+            errors.append(f"{os.path.relpath(path, root)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1
+                           else os.path.join(os.path.dirname(__file__), ".."))
+    errors = []
+    n = 0
+    for path in md_files(root):
+        if not os.path.exists(path):
+            errors.append(f"missing expected file: {path}")
+            continue
+        n += 1
+        errors.extend(check_file(path, root))
+    for e in errors:
+        print(f"LINKCHECK FAIL {e}")
+    print(f"checked {n} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
