@@ -1,0 +1,73 @@
+"""Multi-host population brackets: one successive-halving bracket shared
+by two population-worker PROCESSES over TCP, rung barriers resolved in the
+server (``core.service.RungBarrier``).
+
+Work is deterministic the same way as ``population_benches``: every phase
+is exactly ``MAX_UPDATES`` GA3C updates (``episodes_per_phase`` is
+unreachable), so env-steps follow from the report count alone. The
+single-host vectorized bracket at the same TOTAL slot count is measured
+alongside, so the row pair shows what splitting one bracket across two
+processes costs (protocol round-trips + barrier parks) and buys (two
+engines stepping concurrently).
+"""
+from __future__ import annotations
+
+from repro.core.executor import PopulationCluster, ProcessCluster
+from repro.core.hypertrick import RandomSearchPolicy
+from repro.core.search_space import Categorical, LogUniform, SearchSpace
+
+T_MAX = 8
+N_ENVS = 16                 # the population worker's default
+MAX_UPDATES = 25
+N_PHASES = 2
+N_TRIALS = 6
+ETA = 3
+
+
+def _space() -> SearchSpace:
+    return SearchSpace({
+        "learning_rate": LogUniform(1e-4, 1e-3),
+        "gamma": Categorical((0.99, 0.995)),
+        "t_max": Categorical((T_MAX,)),
+    })
+
+
+def _policy() -> RandomSearchPolicy:
+    return RandomSearchPolicy(_space(), N_TRIALS, N_PHASES, seed=0)
+
+
+def _env_steps(res) -> int:
+    return len(res.records) * MAX_UPDATES * T_MAX * N_ENVS
+
+
+def bench_population_multihost():
+    """2 worker processes x 2 slots sharing ONE bracket vs 1 vectorized
+    host at 4 slots with the same bracket: identical budget, eta, and
+    per-phase work."""
+    rows = []
+    spec = {"kind": "rl", "game": "pong", "episodes_per_phase": 10 ** 9,
+            "max_updates": MAX_UPDATES, "seed": 0}
+    multi = ProcessCluster(2, spec, lease_ttl=60.0, heartbeat_interval=1.0,
+                           slots=2, bracket_eta=ETA).run(_policy())
+    rungs = (multi.extra or {}).get("rungs", [])
+    pooled = rungs[0]["n"] if rungs else 0
+    demoted = sum(len(r["demoted"]) for r in rungs)
+    rows.append(("multihost/2x2/env_steps_per_s",
+                 float(_env_steps(multi) / multi.wall_time),
+                 f"wall={multi.wall_time:.1f}s (incl per-process jax "
+                 f"import + compile) rungs={len(rungs)} "
+                 f"rung0_n={pooled} demoted={demoted}"))
+    rows.append(("multihost/2x2/rung0_cohort_pooled", float(pooled),
+                 f"2 hosts x 2 slots, eta={ETA}: either host alone "
+                 f"(cohort 2 < eta) demotes nobody; the pooled cohort "
+                 f"demotes n//eta={pooled // ETA if pooled else 0}"))
+
+    single = PopulationCluster(4, game="pong",
+                               episodes_per_phase=10 ** 9, n_envs=N_ENVS,
+                               max_updates=MAX_UPDATES, seed=0,
+                               bracket_eta=ETA).run(_policy())
+    rows.append(("multihost/1x4_vectorized/env_steps_per_s",
+                 float(single.env_steps / single.wall_time),
+                 f"wall={single.wall_time:.1f}s (in-process engine, same "
+                 "bracket via LocalDriver) — the single-host fast path"))
+    return rows

@@ -31,6 +31,7 @@ def _suites(fast: bool):
         ("kernels", sb.bench_kernels),
     ]
     if not fast:
+        from benchmarks import multihost_benches as mhb
         from benchmarks import population_benches as pb
         from benchmarks import sharded_benches as shb
         suites += [
@@ -40,6 +41,7 @@ def _suites(fast: bool):
             ("backend_overhead", mb.bench_backend_overhead),  # distributed
             ("population_throughput", pb.bench_population_throughput),
             ("sharded_population", shb.bench_sharded_population),
+            ("population_multihost", mhb.bench_population_multihost),
         ]
     return suites
 

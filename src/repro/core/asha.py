@@ -16,12 +16,35 @@ from repro.core.service import AsyncPolicy, Decision
 
 
 def rung_phases(n_phases: int, eta: int) -> list:
-    """Rung placement shared by ASHA and the population engine's on-device
+    """Rung placement shared by ASHA and the bracket barrier's
     successive-halving mode: rungs at phase indices eta^0-1, eta^1-1, ...
     (the final phase completes unconditionally and is never a rung)."""
     return sorted({min(eta ** i, n_phases) - 1
                    for i in range(0, 1 + max(1, int(
                        math.log(max(n_phases, 1), eta)) + 1))})
+
+
+def rung_demotions(n: int, eta: int) -> int:
+    """How many of an ``n``-trial rung cohort are demoted: the bottom
+    ``n // eta``, EXCEPT that a cohort smaller than eta carries too little
+    evidence to demote anyone (ASHA's "not enough evidence" rule, made
+    explicit — ``n // eta`` happens to be 0 there too, but relying on the
+    floor silently was how small-cohort demotion degraded to a no-op).
+    Shared by the service-side ``RungBarrier``, so single-host and
+    multi-host brackets agree by construction."""
+    assert eta >= 2, eta
+    if n < eta:
+        return 0
+    return n // eta
+
+
+def demote_indices(metrics: list, eta: int) -> set:
+    """Indices (into ``metrics``'s order — the cohort's park order) of the
+    members a rung barrier demotes: a single stable ascending argsort over
+    float32 metrics (matching the on-device ranking dtype), bottom
+    ``rung_demotions`` taken, ties broken by position."""
+    order = np.argsort(np.asarray(metrics, np.float32), kind="stable")
+    return set(order[:rung_demotions(len(metrics), eta)].tolist())
 
 
 class ASHA(AsyncPolicy):

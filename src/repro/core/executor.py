@@ -23,6 +23,7 @@ import sys
 import threading
 import time
 import traceback
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
@@ -120,12 +121,20 @@ class ProcessCluster:
     With ``journal_path`` set, every event is WAL-logged; ``resume=True``
     replays an existing journal first, so a restarted search continues with
     the same trial records (orphaned RUNNING trials are reclaimed).
+
+    ``bracket_eta`` turns on the service-side successive-halving barrier
+    (``core.service.RungBarrier``): ONE bracket spans every worker process
+    — rung-phase reports park on the server, cohorts pool across hosts,
+    and the bottom 1/eta of each pooled cohort is demoted. Workers are
+    launched with ``--bracket`` so their acquires carry the rung hint.
     """
 
     def __init__(self, n_nodes: int, objective_spec: Dict,
                  lease_ttl: float = 15.0, heartbeat_interval: float = 1.0,
                  journal_path: Optional[str] = None, resume: bool = False,
-                 host: str = "127.0.0.1", port: int = 0, slots: int = 1):
+                 host: str = "127.0.0.1", port: int = 0, slots: int = 1,
+                 bracket_eta: Optional[int] = None,
+                 worker_grace: Optional[float] = None):
         self.n_nodes = n_nodes
         self.objective_spec = dict(objective_spec)
         self.lease_ttl = lease_ttl
@@ -137,6 +146,12 @@ class ProcessCluster:
         # slots > 1: each worker process is a multi-trial population engine
         # leasing up to this many trials at once (RL objectives only)
         self.slots = slots
+        self.bracket_eta = bracket_eta
+        # how long workers may linger once the service is drained (no
+        # leases, no requeued configs) before the launcher presumes them
+        # hung and kills them; None -> 3 lease TTLs (>= 30 s)
+        self.worker_grace = (worker_grace if worker_grace is not None
+                             else max(3.0 * lease_ttl, 30.0))
 
     def _worker_cmd(self, port: int, node: int) -> List[str]:
         cmd = [sys.executable, "-m", "repro.distributed.worker",
@@ -146,6 +161,8 @@ class ProcessCluster:
                "--heartbeat-interval", str(self.heartbeat_interval)]
         if self.slots > 1:
             cmd += ["--slots", str(self.slots)]
+        if self.bracket_eta is not None:
+            cmd += ["--bracket"]
         return cmd
 
     def spawn_workers(self, port: int) -> List[subprocess.Popen]:
@@ -159,11 +176,63 @@ class ProcessCluster:
         return [subprocess.Popen(self._worker_cmd(port, i), env=env)
                 for i in range(self.n_nodes)]
 
+    def _await_workers(self, procs, server, svc) -> List[int]:
+        """Wait for every worker, but bounded: once the service is drained
+        (no live leases, no requeued configs waiting for a taker) a healthy
+        worker exits within one acquire round-trip, so any process still
+        alive ``worker_grace`` seconds later is presumed hung and killed —
+        a single stuck worker cannot stall the launcher forever. Returns
+        per-process exit codes."""
+        drained_since: Optional[float] = None
+        dead_nodes: set = set()
+        while True:
+            exited = {i for i, p in enumerate(procs) if p.poll() is not None}
+            for i in exited - dead_nodes:
+                # an exited worker's free capacity will never refill the
+                # bracket: stop the entry cohort waiting for it
+                svc.reduce_bracket_entrants(self.slots)
+            dead_nodes = exited
+            if len(exited) == len(procs):
+                break
+            # "drained" only makes sense once the search has started:
+            # before the first acquire (workers still importing jax /
+            # compiling) there is nothing to be drained OF — svc.drained()
+            # is False until the first trial exists
+            busy = server.live_lease_count() > 0 or not svc.drained()
+            now = time.monotonic()
+            if busy:
+                drained_since = None
+            elif drained_since is None:
+                drained_since = now
+            elif now - drained_since > self.worker_grace:
+                hung = [p for p in procs if p.poll() is None]
+                warnings.warn(
+                    f"killing {len(hung)} worker process(es) still alive "
+                    f"{self.worker_grace:.0f}s after the service drained "
+                    "(no leases, no requeued configs) — presumed hung")
+                for p in hung:
+                    p.kill()
+                for p in hung:
+                    p.wait()
+                break
+            time.sleep(0.1)
+        return [p.wait() for p in procs]
+
     def run(self, policy: AsyncPolicy) -> ExecResult:
         from repro.distributed.journal import Journal, replay_journal
         from repro.distributed.server import MetaoptServer
 
-        svc = OptimizationService(policy)
+        svc = OptimizationService(policy, bracket_eta=self.bracket_eta)
+        # bracket entry cohorts are sized to real capacity: the first waits
+        # for min(total worker slots, budget) enrollments (seeded via the
+        # server's bracket_capacity below), and a fully-parked cohort
+        # missing dead capacity resolves after the patience window instead
+        # of wedging
+        capacity = self.n_nodes * self.slots
+        budget = (getattr(policy, "n_trials", None)
+                  or getattr(policy, "w0", None))
+        bracket_capacity = (min(capacity, budget) if budget else capacity) \
+            if svc.barrier is not None else None
         journal = None
         if self.journal_path:
             if not self.resume and os.path.exists(self.journal_path):
@@ -175,12 +244,13 @@ class ProcessCluster:
                 replay_journal(self.journal_path, svc, journal=journal)
 
         server = MetaoptServer(svc, self.host, self.port,
-                               lease_ttl=self.lease_ttl, journal=journal)
+                               lease_ttl=self.lease_ttl, journal=journal,
+                               bracket_capacity=bracket_capacity)
         server.start()
         t0 = time.monotonic()
         try:
             procs = self.spawn_workers(server.port)
-            rcs = [p.wait() for p in procs]
+            rcs = self._await_workers(procs, server, svc)
             wall = time.monotonic() - t0
         finally:
             server.stop()
@@ -191,11 +261,22 @@ class ProcessCluster:
                 f"all {self.n_nodes} workers failed (exit codes {rcs}) "
                 "before reporting anything — check the objective spec and "
                 "worker environment")
+        extra: Dict = {}
+        failed = {node: rc for node, rc in enumerate(rcs) if rc != 0}
+        if failed:
+            # a PARTIAL failure must not be silent: the search completed on
+            # the surviving workers, but the caller should know
+            warnings.warn(f"{len(failed)}/{self.n_nodes} worker "
+                          f"process(es) exited nonzero: {failed}")
+            extra["worker_exit_codes"] = rcs
+        if svc.barrier is not None and svc.barrier.rung_log:
+            extra["rungs"] = svc.barrier.rung_log
         records = [ExecRecord(tid, node if node is not None else -1, phase,
                               ts, te, metric)
                    for tid, node, phase, ts, te, metric in server.report_log]
         # capacity for occupancy accounting: slots trials fit in each worker
-        return ExecResult(svc, records, wall, self.n_nodes * self.slots)
+        return ExecResult(svc, records, wall, self.n_nodes * self.slots,
+                          extra=extra or None)
 
 
 class PopulationCluster:
@@ -241,7 +322,17 @@ class PopulationCluster:
         if self.devices > 1:
             from repro.launch.mesh import make_population_mesh
             mesh = make_population_mesh(self.devices, 1)
-        svc = OptimizationService(policy)
+        # the rung barrier lives in the service (core.service.RungBarrier):
+        # the engine is a thin park/poll client of it, same as remote hosts
+        svc = OptimizationService(policy, bracket_eta=self.bracket_eta)
+        if svc.barrier is not None:
+            # single host: the whole entry cohort enrolls in one admission
+            # pass before anything can park, so this is consumed instantly
+            # — it exists for interface parity with ProcessCluster
+            budget = (getattr(policy, "n_trials", None)
+                      or getattr(policy, "w0", None))
+            svc.configure_bracket(expect_entrants=(
+                min(slots, budget) if budget else slots))
         engine = PopulationEngine(
             self.game, max_slots=slots, n_envs=self.n_envs,
             episodes_per_phase=self.episodes_per_phase,
@@ -253,12 +344,11 @@ class PopulationCluster:
         records = [ExecRecord(tid, slot, phase, ts, te, metric)
                    for tid, slot, phase, ts, te, metric in rows]
         extra: Dict = {"devices": self.devices}
-        if engine.rung_log:
+        if svc.barrier is not None and svc.barrier.rung_log:
             from repro.core.completion import demotion_alpha, demotion_bracket
-            extra["rungs"] = engine.rung_log
+            extra["rungs"] = svc.barrier.rung_log
             br = demotion_bracket(slots, self.bracket_eta,
-                                  sorted(engine._rung_set or ()),
-                                  policy.n_phases)
+                                  svc.barrier.rungs, policy.n_phases)
             extra["bracket"] = {"n": br.n, "r": br.r}
             extra["bracket_alpha"] = round(demotion_alpha(br), 4)
         return ExecResult(svc, records, wall, slots,

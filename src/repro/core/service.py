@@ -19,6 +19,10 @@ from typing import Any, Dict, Iterable, List, Optional
 class Decision(enum.Enum):
     CONTINUE = "continue"
     STOP = "stop"
+    # rung barrier (bracket mode): the report is withheld server-side until
+    # the trial's rung cohort is complete — keep the slot parked, keep the
+    # lease alive, and poll by re-sending the identical report
+    PARKED = "parked"
 
 
 class TrialStatus(enum.Enum):
@@ -151,6 +155,160 @@ class KnowledgeDB:
             }
 
 
+@dataclass
+class ParkedReport:
+    """A rung-phase report withheld at the generation barrier: the metric
+    and worker-side timestamps are held here (NOT in the knowledge DB) until
+    the trial's rung cohort is complete, then recorded and answered with a
+    promote/demote decision."""
+    trial_id: int
+    phase: int
+    metric: float
+    t_start: float = 0.0
+    t_end: float = 0.0
+    node: Optional[int] = None
+    # set at resolution: the decision delivered to the worker's next poll,
+    # and the service-clock time the report was recorded to the DB
+    decision: Optional[Decision] = None
+    t_recorded: Optional[float] = None
+
+
+class RungBarrier:
+    """The shared-population generation barrier for successive-halving
+    brackets (the multi-host generalization of the PR-3 engine-local rungs).
+
+    Trials opt in via the ``rung`` acquire hint. An enrolled trial is always
+    *heading* to its next rung phase; when it reports at that phase the
+    report parks here instead of landing in the DB, and the cohort at rung
+    ``p`` (every enrolled live trial heading to ``p``) resolves once all its
+    members are parked — so one bracket spans any number of hosts, with the
+    cohort sized by rung-aware ACQUIRE rather than by any single engine's
+    slot count. A member that dies (crash, lease reaped) is discarded and
+    the cohort *shrinks*, so a dead host can never wedge the barrier; its
+    withheld report is dropped and its configuration requeues as usual.
+
+    Not thread-safe on its own: every mutation happens under the owning
+    ``OptimizationService``'s lock.
+    """
+
+    def __init__(self, eta: int, n_phases: int):
+        from repro.core.asha import rung_phases  # service<-asha cycle
+        assert eta >= 2, eta
+        self.eta = eta
+        self.n_phases = n_phases
+        # the final phase completes unconditionally and is never a rung
+        self.rungs = [p for p in rung_phases(n_phases, eta)
+                      if p < n_phases - 1]
+        self._heading: Dict[int, int] = {}     # trial_id -> next rung phase
+        # park (insertion) order is the cohort's tie-break base order
+        self._parked: Dict[int, ParkedReport] = {}
+        self._verdicts: Dict[int, Decision] = {}   # resolved, not yet polled
+        self._resolved_queue: List[ParkedReport] = []
+        self.rung_log: List[dict] = []
+        # -- entry-cohort sizing (rung-aware acquire) -----------------------
+        # how many MORE bracket entrants the rung-0 cohort should wait for
+        # before it may resolve: the launcher seeds it with the initial
+        # capacity (min(total slots, budget)), each resolution adds the
+        # capacity it freed, every hinted grant consumes one, and a spent
+        # budget collapses it — so the entry cohort is sized to the freed
+        # capacity actually being refilled across every host, and a host
+        # that parks early cannot strand the others outside the bracket
+        self.pending_entrants = 0
+        self._entrants_closed = False      # budget spent: no more, ever
+        # safety valve for capacity that died before refilling (its worker
+        # crashed between freeing a slot and acquiring): a fully-parked
+        # entry cohort still resolves after this many seconds even with
+        # entrants outstanding. None = wait forever (single-host engines,
+        # where enrollment is same-loop and can never stall).
+        self.entrant_patience: Optional[float] = None
+        self._all_parked_since: Dict[int, float] = {}
+
+    # -- entry-cohort sizing ------------------------------------------------
+    def expect_entrants(self, n: int) -> None:
+        self.pending_entrants = max(self.pending_entrants, n)
+
+    def reduce_entrants(self, n: int) -> None:
+        """Capacity that will never refill (its worker process exited):
+        stop waiting for it. Over-reduction is safe — cohorts resolve
+        slightly smaller, never wedge."""
+        self.pending_entrants = max(0, self.pending_entrants - n)
+
+    def no_more_entrants(self) -> None:
+        """The policy budget is spent: nobody else is ever joining."""
+        self._entrants_closed = True
+        self.pending_entrants = 0
+
+    # -- membership ---------------------------------------------------------
+    def _next_rung(self, phases_completed: int) -> Optional[int]:
+        for p in self.rungs:
+            if p >= phases_completed:
+                return p
+        return None
+
+    def enroll(self, trial_id: int) -> None:
+        """A fresh trial (phases_completed == 0) joins the bracket, heading
+        to the first rung, and consumes one expected entrant. Trials
+        acquired WITHOUT the rung hint are never enrolled: their rung-phase
+        reports resolve immediately, so scalar workers predating the
+        barrier can share the server without wedging a cohort."""
+        rung = self._next_rung(0)
+        if rung is not None:
+            self._heading[trial_id] = rung
+            self.pending_entrants = max(0, self.pending_entrants - 1)
+
+    def tracks(self, trial_id: int) -> bool:
+        return trial_id in self._heading or trial_id in self._verdicts
+
+    def heading(self, trial_id: int) -> Optional[int]:
+        return self._heading.get(trial_id)
+
+    def is_parked(self, trial_id: int) -> bool:
+        return trial_id in self._parked
+
+    def members(self, rung: int) -> List[int]:
+        return [t for t, r in self._heading.items() if r == rung]
+
+    def cohort_ready(self, rung: int, now: float) -> bool:
+        """May the cohort at ``rung`` resolve? Every member must be parked;
+        the ENTRY rung additionally waits for the expected entrants (freed
+        capacity still refilling on other hosts), up to ``entrant_patience``
+        seconds after the last member parked."""
+        ms = self.members(rung)
+        if not ms or not all(t in self._parked for t in ms):
+            self._all_parked_since.pop(rung, None)
+            return False
+        if (not self.rungs or rung != self.rungs[0]
+                or self.pending_entrants <= 0):
+            return True
+        since = self._all_parked_since.setdefault(rung, now)
+        return (self.entrant_patience is not None
+                and now - since >= self.entrant_patience)
+
+    def park(self, rep: ParkedReport) -> None:
+        assert self._heading.get(rep.trial_id) == rep.phase, (
+            rep.trial_id, rep.phase, self._heading.get(rep.trial_id))
+        self._parked[rep.trial_id] = rep
+
+    def take_verdict(self, trial_id: int) -> Optional[Decision]:
+        return self._verdicts.pop(trial_id, None)
+
+    def discard(self, trial_id: int) -> Optional[int]:
+        """Drop a dead member (crash / reaped lease / policy kill): its
+        withheld report — if any — is dropped, and the rung it was heading
+        to is returned so the caller can re-check that cohort (the shrink
+        may have completed it)."""
+        rung = self._heading.pop(trial_id, None)
+        self._parked.pop(trial_id, None)
+        self._verdicts.pop(trial_id, None)
+        return rung
+
+    def drain_resolved(self) -> List[ParkedReport]:
+        """Reports recorded by resolutions since the last drain, in each
+        cohort's park order — the transport layer journals/logs them."""
+        out, self._resolved_queue = self._resolved_queue, []
+        return out
+
+
 class AsyncPolicy:
     """A metaoptimization policy for asynchronous execution. Subclasses:
     HyperTrick, RandomSearchPolicy."""
@@ -177,7 +335,8 @@ class AsyncPolicy:
 class OptimizationService:
     """Thread-safe facade the workers talk to (report / acquire / query)."""
 
-    def __init__(self, policy: AsyncPolicy, clock=time.monotonic):
+    def __init__(self, policy: AsyncPolicy, clock=time.monotonic,
+                 bracket_eta: Optional[int] = None):
         self.db = KnowledgeDB()
         policy.bind(self.db)
         self.policy = policy
@@ -186,6 +345,13 @@ class OptimizationService:
         self._next_id = 0
         # configs reclaimed from dead workers, re-issued before new draws
         self._requeue: deque = deque()
+        # bracket mode: the successive-halving generation barrier lives in
+        # the SERVICE, so one bracket spans any number of hosts (every
+        # transport — in-process LocalDriver or the TCP server — speaks the
+        # same park/resolve interface)
+        self.barrier: Optional[RungBarrier] = (
+            RungBarrier(bracket_eta, policy.n_phases)
+            if bracket_eta is not None else None)
 
     def requeue(self, hparams: Dict[str, Any]):
         """Re-issue a configuration whose worker died (lease expired): the
@@ -193,7 +359,14 @@ class OptimizationService:
         with self._lock:
             self._requeue.append(hparams)
 
-    def acquire_trial(self, node: Optional[int] = None) -> Optional[TrialRecord]:
+    def acquire_trial(self, node: Optional[int] = None,
+                      rung: Optional[int] = None) -> Optional[TrialRecord]:
+        """``rung`` is the rung-aware acquire hint: the caller is refilling
+        freed bracket capacity, so the granted trial is enrolled in the
+        barrier immediately — the rung-0 cohort is sized at grant time,
+        before any park, and cannot resolve under an in-flight member.
+        Without the hint the trial never parks (plain asynchronous search,
+        or a bracket-unaware worker sharing the server)."""
         with self._lock:
             requeued = False
             if self._requeue:
@@ -202,38 +375,169 @@ class OptimizationService:
             else:
                 hp = self.policy.next_hparams()
             if hp is None:
+                if self.barrier is not None and rung is not None:
+                    # a bracket participant asked and the budget is spent:
+                    # the entry cohort stops waiting for anyone else (any
+                    # cohort it gated may now be resolvable on next poll)
+                    self.barrier.no_more_entrants()
                 return None
             rec = TrialRecord(self._next_id, hp, node=node, requeued=requeued,
                               start_time=self.clock())
             self._next_id += 1
             self.db.add_trial(rec)
+            if self.barrier is not None and rung is not None:
+                self.barrier.enroll(rec.trial_id)
             return rec
 
-    def report(self, trial_id: int, phase: int, metric: float) -> Decision:
+    def report(self, trial_id: int, phase: int, metric: float,
+               t_start: float = 0.0, t_end: float = 0.0,
+               node: Optional[int] = None) -> Decision:
         with self._lock:
+            b = self.barrier
+            if b is not None and b.tracks(trial_id):
+                verdict = b.take_verdict(trial_id)
+                if verdict is not None:
+                    # a poll after resolution: the report was recorded (and
+                    # the cohort ranked) when the barrier resolved — just
+                    # deliver the decision
+                    return verdict
+                if b.heading(trial_id) == phase:
+                    if not b.is_parked(trial_id):
+                        b.park(ParkedReport(trial_id, phase, metric,
+                                            t_start, t_end, node))
+                    # the readiness check runs on PARKS and on POLLS: polls
+                    # are what pick up late entrant-closures (budget spent
+                    # on another connection) and the patience timeout.
+                    # Even the parker that completed the cohort is answered
+                    # "parked": every member learns its verdict on its next
+                    # poll, so a host's verdicts arrive in its own stable
+                    # slot order (deterministic records/ranking).
+                    if b.cohort_ready(phase, self.clock()):
+                        self._resolve_rung(phase)
+                    return Decision.PARKED
             now = self.clock()
             prior = self.db.report(trial_id, phase, metric, now)
             decision = self.policy.on_report(trial_id, phase, metric, prior)
             if phase >= self.policy.n_phases - 1:
+                self._untrack(trial_id)
                 self.db.set_status(trial_id, TrialStatus.COMPLETED, now)
                 return Decision.STOP
             if decision == Decision.STOP:
+                self._untrack(trial_id)
                 self.db.set_status(trial_id, TrialStatus.KILLED, now)
             return decision
+
+    def _resolve_rung(self, rung: int) -> None:
+        """The generation barrier: rank the complete cohort (stable argsort
+        over float32 metrics, ties broken by park order), demote the bottom
+        ``n // eta`` — unless the cohort is smaller than eta, in which case
+        nobody is demoted (ASHA's not-enough-evidence rule, shared via
+        ``asha.rung_demotions``) — record every withheld report, and set
+        each member's verdict for its next poll."""
+        from repro.core.asha import demote_indices  # service<-asha cycle
+        b = self.barrier
+        # park order (dict insertion order) is the deterministic base order
+        group = [b._parked.pop(t) for t in list(b._parked)
+                 if b._heading.get(t) == rung]
+        demoted_j = demote_indices([r.metric for r in group], b.eta)
+        now = self.clock()
+        demoted, promoted, stopped = [], [], []
+        for j, rep in enumerate(group):
+            prior = self.db.report(rep.trial_id, rep.phase, rep.metric, now)
+            decision = self.policy.on_report(rep.trial_id, rep.phase,
+                                             rep.metric, prior)
+            rep.t_recorded = now
+            del b._heading[rep.trial_id]
+            if j in demoted_j or decision == Decision.STOP:
+                # demotion, or a policy stop the barrier honors anyway —
+                # logged apart so the rung accounting stays exact
+                (demoted if j in demoted_j else stopped).append(rep.trial_id)
+                self.db.set_status(rep.trial_id, TrialStatus.KILLED, now)
+                rep.decision = Decision.STOP
+            else:
+                promoted.append(rep.trial_id)
+                rep.decision = Decision.CONTINUE
+                nxt = b._next_rung(rep.phase + 1)
+                if nxt is not None:
+                    b._heading[rep.trial_id] = nxt
+            b._verdicts[rep.trial_id] = rep.decision
+            b._resolved_queue.append(rep)
+        entry = {"phase": rung, "n": len(group),
+                 "demoted": demoted, "promoted": promoted}
+        if stopped:
+            entry["stopped"] = stopped
+        b.rung_log.append(entry)
+        b._all_parked_since.pop(rung, None)
+        if not b._entrants_closed:
+            # the capacity this resolution freed refills the entry rung:
+            # its next cohort waits for that many fresh enrollments
+            b.pending_entrants += len(demoted) + len(stopped)
+
+    def _untrack(self, trial_id: int) -> None:
+        """Remove a trial from the barrier (terminal status, crash, reaped
+        lease) and resolve any cohort its departure completed — the
+        reaper-shrink path that keeps a dead host from wedging a rung."""
+        if self.barrier is None:
+            return
+        rung = self.barrier.discard(trial_id)
+        if rung is not None and self.barrier.cohort_ready(rung,
+                                                          self.clock()):
+            self._resolve_rung(rung)
+
+    def drain_resolved(self) -> List[ParkedReport]:
+        """Barrier resolutions since the last call (empty without a
+        barrier): the transport journals/logs these reports."""
+        if self.barrier is None:
+            return []
+        with self._lock:
+            return self.barrier.drain_resolved()
+
+    def configure_bracket(self, expect_entrants: Optional[int] = None,
+                          entrant_patience: Optional[float] = None) -> None:
+        """Size the barrier's entry cohorts: ``expect_entrants`` is the
+        bracket capacity the first rung-0 cohort should wait for (typically
+        min(total worker slots, budget)); ``entrant_patience`` bounds that
+        wait once the cohort is fully parked. No-op without a barrier."""
+        if self.barrier is None:
+            return
+        with self._lock:
+            if expect_entrants is not None:
+                self.barrier.expect_entrants(expect_entrants)
+            if entrant_patience is not None:
+                self.barrier.entrant_patience = entrant_patience
+
+    def reduce_bracket_entrants(self, n: int) -> None:
+        """Bracket capacity that died (its worker exited): stop the entry
+        cohort waiting for it. No-op without a barrier."""
+        if self.barrier is None:
+            return
+        with self._lock:
+            self.barrier.reduce_entrants(n)
+
+    def drained(self) -> bool:
+        """True once the search has started AND no requeued configuration
+        is waiting for a taker — the launcher-side half of the "everything
+        that can finish has finished" check (live leases are the server's
+        half)."""
+        with self._lock:
+            return bool(self.db.trials) and not self._requeue
 
     def crash(self, trial_id: int):
         """Worker failure: strictly local effect (paper §3.2)."""
         with self._lock:
+            self._untrack(trial_id)
             self.db.set_status(trial_id, TrialStatus.CRASHED, self.clock())
 
     def stop_trial(self, trial_id: int):
-        """Executor-driven eviction (the population engine's rung demotion):
+        """Executor-driven eviction (a client-side ``demote`` report):
         mark a RUNNING trial KILLED — same terminal status a policy STOP
         decision produces, but decided outside ``on_report``."""
         with self._lock:
             rec = self.db.trials[trial_id]
             if rec.status is TrialStatus.RUNNING:
-                self.db.set_status(trial_id, TrialStatus.KILLED, self.clock())
+                self._untrack(trial_id)
+                self.db.set_status(trial_id, TrialStatus.KILLED,
+                                   self.clock())
 
     def replay(self, events: List[dict],
                reclaim_running: bool = True) -> List[TrialRecord]:

@@ -48,21 +48,28 @@ class ServiceClient:
         return resp
 
     # -- verbs --------------------------------------------------------------
-    def acquire(self, node: Optional[int] = None):
-        """A RemoteTrial, a Pending marker (retry later), or None (done)."""
-        resp = self._call(proto.AcquireRequest(node=node))
+    def acquire(self, node: Optional[int] = None,
+                rung: Optional[int] = None):
+        """A RemoteTrial, a Pending marker (retry later), or None (done).
+        ``rung`` is the bracket hint: granted trials enroll in the
+        server-side rung barrier at grant time (pass 0 when refilling
+        bracket capacity; omit for plain searches)."""
+        resp = self._call(proto.AcquireRequest(node=node, rung=rung))
         if resp.trial_id is None:
             if resp.retry_after is not None:
                 return Pending(resp.retry_after)
             return None
         return RemoteTrial(resp.trial_id, resp.hparams, resp.n_phases)
 
-    def acquire_batch(self, node: Optional[int] = None, slots: int = 1):
+    def acquire_batch(self, node: Optional[int] = None, slots: int = 1,
+                      rung: Optional[int] = None):
         """Lease up to ``slots`` trials in one round-trip (population
         workers). A list of RemoteTrials (possibly fewer than ``slots``),
-        a Pending marker, or None (budget spent for good)."""
+        a Pending marker, or None (budget spent for good). ``rung`` as in
+        :meth:`acquire`."""
         resp = self._call(proto.AcquireRequest(node=node,
-                                               slots=max(1, slots)))
+                                               slots=max(1, slots),
+                                               rung=rung))
         if resp.trial_id is None:
             if resp.retry_after is not None:
                 return Pending(resp.retry_after)
@@ -76,6 +83,10 @@ class ServiceClient:
     def report(self, trial_id: int, phase: int, metric: float,
                t_start: float = 0.0, t_end: float = 0.0,
                node: Optional[int] = None, demote: bool = False) -> str:
+        """The server's decision: ``"continue"``, ``"stop"``, or — bracket
+        mode — ``"parked"`` (the report is withheld at the rung barrier;
+        keep the trial's state and poll by re-sending the identical
+        report)."""
         resp = self._call(proto.ReportRequest(
             trial_id=trial_id, phase=phase, metric=float(metric),
             t_start=t_start, t_end=t_end, node=node,

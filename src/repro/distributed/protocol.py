@@ -42,6 +42,13 @@ class AcquireRequest:
     # multi-trial workers (population engine): lease up to this many trials
     # in one round-trip. Old clients simply omit the field (default 1).
     slots: int = 1
+    # rung-aware acquire (bracket mode): the caller is refilling freed
+    # bracket capacity, so the granted trials enroll in the server-side
+    # rung barrier at grant time — the rung-0 cohort is sized to the freed
+    # capacity before any park. Omitted when None: hint-less trials never
+    # park (plain search, or a bracket-unaware worker sharing the server).
+    rung: Optional[int] = None
+    OMIT_IF_NONE = ("rung",)
 
 
 @message("report")
@@ -101,7 +108,10 @@ class AcquireResponse:
 
 @message("report_ok")
 class ReportResponse:
-    decision: str                     # "continue" | "stop"
+    # "continue" | "stop" | "parked" — "parked" (bracket mode only) means
+    # the report is withheld at the rung barrier: keep the trial's state,
+    # keep heartbeating, and poll by re-sending the identical report
+    decision: str
 
 
 @message("heartbeat_ok")

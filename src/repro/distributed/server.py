@@ -23,9 +23,18 @@ from repro.distributed.journal import Journal
 class MetaoptServer:
     def __init__(self, service: OptimizationService, host: str = "127.0.0.1",
                  port: int = 0, lease_ttl: float = 15.0,
-                 journal: Optional[Journal] = None, clock=time.monotonic):
+                 journal: Optional[Journal] = None, clock=time.monotonic,
+                 bracket_capacity: Optional[int] = None):
         self.service = service
         self.lease_ttl = lease_ttl
+        if bracket_capacity is not None:
+            # bracket mode: the first rung-0 cohort waits for this many
+            # enrollments (the fleet's total slots, capped by budget by the
+            # caller), so pooling never depends on host connection timing;
+            # the patience valve keeps dead capacity from wedging it
+            service.configure_bracket(
+                expect_entrants=bracket_capacity,
+                entrant_patience=max(2.0 * lease_ttl, 10.0))
         self.journal = journal
         self.clock = clock
         self._leases: Dict[int, float] = {}          # trial_id -> expiry
@@ -36,7 +45,11 @@ class MetaoptServer:
         self._log_lock = threading.Lock()
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
-        self._conns: List[socket.socket] = []
+        # mutated by every handler thread + the accept loop + stop():
+        # a set guarded by a lock (remove-if-present was a check-then-act
+        # race that could raise ValueError under concurrent disconnects)
+        self._conns: set = set()
+        self._conns_lock = threading.Lock()
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._listener.bind((host, port))
@@ -44,6 +57,10 @@ class MetaoptServer:
         self.host, self.port = self._listener.getsockname()[:2]
 
     # -- lifecycle ----------------------------------------------------------
+    def live_lease_count(self) -> int:
+        with self._lease_lock:
+            return len(self._leases)
+
     def start(self) -> "MetaoptServer":
         self._listener.settimeout(0.2)
         for target in (self._accept_loop, self._reaper_loop):
@@ -58,7 +75,9 @@ class MetaoptServer:
             self._listener.close()
         except OSError:
             pass
-        for conn in list(self._conns):
+        with self._conns_lock:
+            conns = list(self._conns)
+        for conn in conns:
             try:
                 conn.close()
             except OSError:
@@ -81,7 +100,8 @@ class MetaoptServer:
                 continue
             except OSError:
                 return
-            self._conns.append(conn)
+            with self._conns_lock:
+                self._conns.add(conn)
             t = threading.Thread(target=self._handle, args=(conn,),
                                  daemon=True)
             t.start()
@@ -107,8 +127,8 @@ class MetaoptServer:
                 conn.close()
             except OSError:
                 pass
-            if conn in self._conns:
-                self._conns.remove(conn)
+            with self._conns_lock:
+                self._conns.discard(conn)
 
     # -- verbs --------------------------------------------------------------
     def _dispatch(self, msg):
@@ -123,10 +143,17 @@ class MetaoptServer:
                     self._leases[msg.trial_id] = self.clock() + self.lease_ttl
             return proto.HeartbeatResponse(ok=alive)
         if isinstance(msg, proto.CrashRequest):
-            self.service.crash(msg.trial_id)
-            self._journal_status(msg.trial_id)
+            # under _lease_lock like every other barrier-resolution
+            # trigger (_do_report, _reclaim): the crashed trial may be the
+            # last unparked member of a rung cohort, and the resolution its
+            # departure causes must not interleave with a concurrent
+            # report's recorded-check on a cohort-mate
             with self._lease_lock:
+                self.service.crash(msg.trial_id)
                 self._leases.pop(msg.trial_id, None)
+                resolved = self.service.drain_resolved()
+            self._journal_status(msg.trial_id)
+            self._absorb_resolved(resolved)
             return proto.CrashResponse()
         if isinstance(msg, proto.SummaryRequest):
             s = self.service.db.summary()
@@ -140,13 +167,14 @@ class MetaoptServer:
     def _do_acquire(self, msg: proto.AcquireRequest):
         n_phases = self.service.policy.n_phases
         slots = max(1, int(getattr(msg, "slots", 1) or 1))
+        rung = getattr(msg, "rung", None)
         # atomic with the reaper: either we get the requeued config of a
         # just-reclaimed trial, or we still see its lease and tell the
         # worker to retry — a dying worker's config can never be lost
         recs = []
         with self._lease_lock:
             for _ in range(slots):
-                rec = self.service.acquire_trial(msg.node)
+                rec = self.service.acquire_trial(msg.node, rung=rung)
                 if rec is None:
                     break
                 self._leases[rec.trial_id] = self.clock() + self.lease_ttl
@@ -175,26 +203,66 @@ class MetaoptServer:
         with self._lease_lock:
             if rec.status is TrialStatus.CRASHED:
                 return proto.ReportResponse(decision="stop")
+            n_before = rec.phases_completed
             decision = self.service.report(msg.trial_id, msg.phase,
-                                           msg.metric)
+                                           msg.metric, t_start=msg.t_start,
+                                           t_end=msg.t_end, node=msg.node)
             if getattr(msg, "demote", None):
-                # rung demotion: metric recorded above, trial killed here
+                # client-side rung demotion (pre-barrier population
+                # engines): metric recorded above, trial killed here
                 self.service.stop_trial(msg.trial_id)
                 decision = Decision.STOP
             if decision.value == "stop":
                 self._leases.pop(msg.trial_id, None)
             else:
+                # renewed for "continue" AND "parked": a parked trial keeps
+                # its lease alive through polls (and heartbeats) while the
+                # rung cohort fills
                 self._leases[msg.trial_id] = self.clock() + self.lease_ttl
-        self._journal({"ev": "report", "trial_id": msg.trial_id,
-                       "phase": msg.phase, "metric": msg.metric,
-                       "t": rec.reports[-1][1]})
-        if rec.status is not TrialStatus.RUNNING:
-            self._journal_status(msg.trial_id)
-        node = msg.node if msg.node is not None else rec.node
-        with self._log_lock:
-            self.report_log.append((msg.trial_id, node, msg.phase,
-                                    msg.t_start, msg.t_end, msg.metric))
+            # a "parked" answer journals nothing here — even when this very
+            # report completed the cohort and the resolution recorded it
+            # (the drain below carries it, exactly once). A verdict poll's
+            # report was recorded at resolution too. Only a fresh normal
+            # recording journals here. The timestamp is captured INSIDE the
+            # lock: a concurrent report on the same trial could otherwise
+            # append first and we would journal its timestamp.
+            recorded = (decision is not Decision.PARKED
+                        and rec.phases_completed > n_before)
+            report_t = rec.reports[-1][1] if recorded else None
+            resolved = self.service.drain_resolved()
+        if recorded:
+            self._journal({"ev": "report", "trial_id": msg.trial_id,
+                           "phase": msg.phase, "metric": msg.metric,
+                           "t": report_t})
+            if rec.status is not TrialStatus.RUNNING:
+                self._journal_status(msg.trial_id)
+            node = msg.node if msg.node is not None else rec.node
+            with self._log_lock:
+                self.report_log.append((msg.trial_id, node, msg.phase,
+                                        msg.t_start, msg.t_end, msg.metric))
+        self._absorb_resolved(resolved)
         return proto.ReportResponse(decision=decision.value)
+
+    def _absorb_resolved(self, resolved) -> None:
+        """Journal + log the withheld reports a barrier resolution just
+        recorded (in the cohort's park order). Leases are NOT released
+        here: a resolved
+        trial keeps its lease until its worker polls the verdict (a normal
+        "stop"-releases-lease report), so the verdict can never race the
+        reaper; a dead worker's lease simply expires."""
+        for rep in resolved:
+            self._journal({"ev": "report", "trial_id": rep.trial_id,
+                           "phase": rep.phase, "metric": rep.metric,
+                           "t": rep.t_recorded})
+            if rep.decision is not Decision.CONTINUE:
+                self._journal_status(rep.trial_id)
+            node = rep.node
+            if node is None:
+                trial = self.service.db.trials.get(rep.trial_id)
+                node = trial.node if trial is not None else None
+            with self._log_lock:
+                self.report_log.append((rep.trial_id, node, rep.phase,
+                                        rep.t_start, rep.t_end, rep.metric))
 
     # -- lease reaper -------------------------------------------------------
     def _reaper_loop(self):
@@ -216,6 +284,10 @@ class MetaoptServer:
         self.service.requeue(rec.hparams)
         self._journal_status(trial_id)
         self._journal({"ev": "requeue", "hparams": rec.hparams})
+        # reaper-shrink: the dead trial leaves its rung cohort (parked or
+        # not), and if the shrunken cohort is now complete the barrier
+        # resolves here instead of wedging on a dead host
+        self._absorb_resolved(self.service.drain_resolved())
 
     # -- journal helpers ----------------------------------------------------
     def _journal(self, event: dict):

@@ -87,15 +87,25 @@ def resolve_objective(spec: dict) -> Callable:
 
 
 class WorkerAgent:
-    """The node-loop of ``ThreadCluster`` over a ``ServiceClient``."""
+    """The node-loop of ``ThreadCluster`` over a ``ServiceClient``.
+
+    With ``bracket=True`` the worker joins a server-side successive-halving
+    bracket: its acquires carry the rung-0 hint (enrolling the trial in the
+    rung barrier), and a report answered ``"parked"`` is simply re-sent —
+    the trainer state is already in-process, so "preemption" while the rung
+    cohort fills on other hosts is just this loop sleeping — until the
+    barrier resolves it to continue (promoted) or stop (demoted)."""
 
     def __init__(self, client: ServiceClient, objective: Callable,
                  heartbeat_interval: float = 2.0,
-                 node: Optional[int] = None):
+                 node: Optional[int] = None, bracket: bool = False,
+                 park_poll_interval: float = 0.2):
         self.client = client
         self.objective = objective
         self.heartbeat_interval = heartbeat_interval
         self.node = node
+        self.bracket = bracket
+        self.park_poll_interval = park_poll_interval
         self._active: Optional[int] = None     # trial currently leased
         self._lost: set = set()                # trials whose lease was lost
         self._stop = threading.Event()
@@ -110,7 +120,8 @@ class WorkerAgent:
         try:
             while True:
                 try:
-                    trial = self.client.acquire(self.node)
+                    trial = self.client.acquire(
+                        self.node, rung=0 if self.bracket else None)
                 except (ServiceError, OSError, RuntimeError):
                     break                       # server gone — we are done
                 if trial is None:
@@ -146,12 +157,21 @@ class WorkerAgent:
                 t_end = time.monotonic() - self._t0
                 if trial.trial_id in self._lost:
                     return                      # lease reclaimed — abandon
-                try:
-                    decision = self.client.report(
-                        trial.trial_id, phase, metric,
-                        t_start=t_start, t_end=t_end, node=self.node)
-                except (ServiceError, OSError, RuntimeError):
-                    return                      # stale trial or server gone
+                while True:
+                    try:
+                        decision = self.client.report(
+                            trial.trial_id, phase, metric,
+                            t_start=t_start, t_end=t_end, node=self.node)
+                    except (ServiceError, OSError, RuntimeError):
+                        return                  # stale trial or server gone
+                    if decision != "parked":
+                        break
+                    # rung barrier: report withheld until the cohort —
+                    # possibly spanning other hosts — is complete; poll by
+                    # re-sending it (each poll renews the lease)
+                    if trial.trial_id in self._lost:
+                        return
+                    time.sleep(self.park_poll_interval)
                 if decision == "stop":
                     return
         finally:
@@ -190,6 +210,11 @@ def main(argv=None) -> int:
                     help="lease up to this many trials at once and train "
                          "them in the on-device population engine (RL "
                          "objectives only; 1 = classic scalar worker)")
+    ap.add_argument("--bracket", action="store_true",
+                    help="join the server-side successive-halving bracket: "
+                         "acquires carry the rung-0 hint and 'parked' "
+                         "report decisions are polled until the rung "
+                         "cohort (pooled across every host) resolves")
     args = ap.parse_args(argv)
 
     if args.spec is not None:
@@ -215,6 +240,7 @@ def main(argv=None) -> int:
             "--max-updates", str(spec.get("max_updates", 2000)),
             "--seed", str(spec.get("seed", 0)),
             "--heartbeat-interval", str(args.heartbeat_interval)]
+            + (["--bracket"] if args.bracket else [])
             + ([] if args.node is None else ["--node", str(args.node)]))
 
     objective = resolve_objective(spec)
@@ -226,7 +252,7 @@ def main(argv=None) -> int:
     with client:
         n = WorkerAgent(client, objective,
                         heartbeat_interval=args.heartbeat_interval,
-                        node=args.node).run()
+                        node=args.node, bracket=args.bracket).run()
     print(f"worker node={args.node} ran {n} trials")
     return 0
 

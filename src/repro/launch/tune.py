@@ -79,13 +79,14 @@ def main():
                          "XLA_FLAGS=--xla_force_host_platform_device_count "
                          "automatically")
     ap.add_argument("--bracket", action="store_true",
-                    help="vectorized: on-device successive-halving rungs — "
-                         "rung phases (eta^k - 1) become generation "
-                         "barriers where the bottom 1/eta of each cohort "
-                         "is demoted by mask and freed slots are hot-"
-                         "swapped. The service policy becomes a pure "
-                         "sampler (--policy is ignored); eviction is the "
-                         "engine's")
+                    help="successive-halving rungs via the service-side "
+                         "generation barrier: rung phases (eta^k - 1) park "
+                         "reports until the cohort is complete, then the "
+                         "bottom 1/eta is demoted. On --backend vectorized "
+                         "the cohort is the local population; on process/"
+                         "server ONE bracket spans every worker process "
+                         "(cohorts pool across hosts). The service policy "
+                         "becomes a pure sampler (--policy is ignored)")
     ap.add_argument("--eta", type=int, default=3,
                     help="rung demotion factor for --bracket (default 3)")
     ap.add_argument("--n-envs", type=int, default=16,
@@ -121,9 +122,13 @@ def main():
         policy = RandomSearchPolicy(space, args.workers, args.phases,
                                     seed=args.seed)
 
-    if args.backend != "vectorized" and (args.devices > 1 or args.bracket):
-        ap.error("--devices/--bracket drive the on-device population "
-                 "engine; use --backend vectorized")
+    if args.backend != "vectorized" and args.devices > 1:
+        ap.error("--devices drives the on-device population engine; use "
+                 "--backend vectorized")
+    if args.backend == "thread" and args.bracket:
+        ap.error("--bracket needs the service-side rung barrier; use "
+                 "--backend vectorized (one host) or process/server "
+                 "(multi-host brackets)")
     if args.bracket and args.eta < 2:
         ap.error("--eta must be >= 2 (demote bottom 1/eta per rung)")
 
@@ -175,7 +180,9 @@ def main():
                                  lease_ttl=args.lease_ttl,
                                  journal_path=journal_path,
                                  resume=args.resume,
-                                 slots=args.slots or 1)
+                                 slots=args.slots or 1,
+                                 bracket_eta=(args.eta if args.bracket
+                                              else None))
 
     result = cluster.run(policy)
     summary = result.summary()

@@ -35,13 +35,16 @@ Two orthogonal extensions ride on the slot axis:
   shard) slot count only: a sharded run with local capacity c bit-matches
   an unsharded run of the same trials at capacity c (see
   tests/test_population_sharded.py).
-* **On-device successive-halving rungs** (``bracket_eta``) — rung phases
-  from ``core.asha.rung_phases`` become generation barriers: a slot that
-  completes a rung phase is *parked* (masked, report withheld); when no
-  slot is left running, the engine ranks each rung cohort's metrics on
-  device, demotes the bottom 1/eta by mask, reports every parked trial
-  (demotions ride the REPORT verb's ``demote`` flag), and hot-swaps
-  promoted survivors or fresh configurations into the slots.
+* **Successive-halving rungs** (``bracket``) — the generation barrier
+  lives in the SERVICE (``core.service.RungBarrier``), not here: a report
+  at a rung phase is answered ``"parked"``, the engine masks the slot
+  (params/opt/env state frozen on device) and keeps polling by re-sending
+  the identical report, and promote/demote come back as plain
+  continue/stop decisions once the rung cohort — which may span any
+  number of hosts — is complete. The engine never ranks a cohort itself;
+  it only tells ACQUIRE (via the ``rung`` hint) that freed capacity is
+  refilling the bracket, so the service sizes rung-0 cohorts to the
+  capacity actually freed across every host.
 """
 from __future__ import annotations
 
@@ -72,31 +75,32 @@ class TrialLease:
 # drivers: how the engine talks to the metaoptimization service
 # ---------------------------------------------------------------------------
 class LocalDriver:
-    """In-process service — the engine IS the whole cluster."""
+    """In-process service — the engine IS the whole cluster. Speaks the
+    same park/resolve interface as the TCP path (the barrier lives in the
+    service either way), so the single-host fast path and a multi-host
+    bracket run the identical decision protocol."""
 
     def __init__(self, service):
         self.service = service
 
-    def acquire_many(self, k: int) -> Tuple[List[TrialLease], Optional[float]]:
+    def acquire_many(self, k: int, rung: Optional[int] = None,
+                     ) -> Tuple[List[TrialLease], Optional[float]]:
         """Up to ``k`` fresh leases. ``(leases, retry)``: ``retry`` is None
         when an empty result is final (budget spent), else seconds to wait
-        before polling again."""
+        before polling again. ``rung`` is the bracket-refill hint."""
         n_phases = getattr(self.service.policy, "n_phases", None)
         leases = []
         for slot in range(k):
-            rec = self.service.acquire_trial()
+            rec = self.service.acquire_trial(rung=rung)
             if rec is None:
                 break
             leases.append(TrialLease(rec.trial_id, rec.hparams, n_phases))
         return leases, None
 
     def report(self, trial_id: int, phase: int, metric: float,
-               t_start: float, t_end: float, demote: bool = False) -> str:
-        decision = self.service.report(trial_id, phase, metric).value
-        if demote:
-            self.service.stop_trial(trial_id)
-            return "stop"
-        return decision
+               t_start: float, t_end: float) -> str:
+        return self.service.report(trial_id, phase, metric,
+                                   t_start=t_start, t_end=t_end).value
 
     def poll_lost(self) -> set:
         """Trials whose lease was revoked out from under us (remote only)."""
@@ -115,9 +119,10 @@ class RemoteDriver:
         self._lost: set = set()
         self._t0 = time.monotonic()
 
-    def acquire_many(self, k: int) -> Tuple[List[TrialLease], Optional[float]]:
+    def acquire_many(self, k: int, rung: Optional[int] = None,
+                     ) -> Tuple[List[TrialLease], Optional[float]]:
         from repro.distributed.client import Pending
-        got = self.client.acquire_batch(node=self.node, slots=k)
+        got = self.client.acquire_batch(node=self.node, slots=k, rung=rung)
         if got is None:
             return [], None
         if isinstance(got, Pending):
@@ -126,12 +131,12 @@ class RemoteDriver:
                 for t in got], None
 
     def report(self, trial_id: int, phase: int, metric: float,
-               t_start: float, t_end: float, demote: bool = False) -> str:
+               t_start: float, t_end: float) -> str:
         from repro.distributed.client import ServiceError
         try:
             return self.client.report(trial_id, phase, metric,
                                       t_start=t_start, t_end=t_end,
-                                      node=self.node, demote=demote)
+                                      node=self.node)
         except ServiceError:
             # stale trial (server restarted / lease reaped between our
             # heartbeat and this report): strictly local effect — drop the
@@ -160,8 +165,9 @@ class SlotMeta:
     phase_t0: float = 0.0
     start_sum: float = 0.0
     start_n: float = 0.0
-    # rung mode: (metric, t_start, t_end) of a completed rung phase whose
-    # report is withheld until the generation barrier resolves
+    # bracket mode: (metric, t_start, t_end) of a rung-phase report the
+    # service answered "parked" — re-sent verbatim as the barrier poll
+    # until the cohort resolves and a continue/stop verdict comes back
     pending: Optional[Tuple[float, float, float]] = None
 
 
@@ -386,12 +392,17 @@ class PopulationEngine:
             self._sharding = NamedSharding(mesh, PartitionSpec("slots"))
         else:
             self._sharding = None
-        # on-device successive halving: rung phases become generation
-        # barriers, bottom 1/eta demoted per rung cohort
+        # bracket mode: the rung barrier itself lives in the SERVICE (the
+        # driver answers "parked" at rung phases); the engine only needs to
+        # know it is a bracket participant so ACQUIRE carries the rung-0
+        # refill hint. eta is enforced service-side — the value here is a
+        # participation flag kept for API continuity.
         assert bracket_eta is None or bracket_eta >= 2, bracket_eta
         self.bracket_eta = bracket_eta
-        self._rung_set: Optional[set] = None   # learned with n_phases
-        self.rung_log: List[dict] = []
+        self._rung_hint = 0 if bracket_eta is not None else None
+        # seconds between barrier polls of parked slots while other slots
+        # still train (an idle host polls continuously instead)
+        self.park_poll_interval = 0.2
         self.buckets: Dict[int, Bucket] = {}
         self.total_env_steps = 0       # active-lane env transitions
         self.total_updates = 0
@@ -438,20 +449,7 @@ class PopulationEngine:
         return out
 
     # -- admission ----------------------------------------------------------
-    def _learn_rungs(self, lease: TrialLease) -> None:
-        """Rung placement needs the search length; the driver delivers it
-        with the first lease (policy.n_phases locally, ACQUIRE's n_phases
-        over the wire)."""
-        if (self.bracket_eta is None or self._rung_set is not None
-                or not lease.n_phases):
-            return
-        from repro.core.asha import rung_phases
-        self._rung_set = {p for p in rung_phases(lease.n_phases,
-                                                 self.bracket_eta)
-                          if p < lease.n_phases - 1}
-
     def admit(self, lease: TrialLease, now: float = 0.0) -> None:
-        self._learn_rungs(lease)
         hp = lease.hparams
         t_max = int(hp.get("t_max", 8))
         bucket = self.buckets.get(t_max)
@@ -496,12 +494,13 @@ class PopulationEngine:
         t0 = time.monotonic()
         exhausted = False
         retry_at = 0.0
+        poll_at = 0.0
         while True:
             now = time.monotonic()
             if (not exhausted and self.n_occupied < self.max_slots
                     and now >= retry_at):
                 leases, retry = driver.acquire_many(
-                    self.max_slots - self.n_occupied)
+                    self.max_slots - self.n_occupied, rung=self._rung_hint)
                 if leases:
                     self._admit_grouped(leases, now - t0)
                 elif retry is None:
@@ -511,11 +510,19 @@ class PopulationEngine:
             lost = driver.poll_lost()
             if lost:
                 self._abandon(lost)
-            if self.n_active == 0 and self._any_parked():
-                # generation barrier: nothing left running, rank the rung
-                # cohorts, demote, promote, free slots
-                self._resolve_rungs(driver, t0)
+            if self._any_parked() and (self.n_active == 0 or now >= poll_at):
+                # barrier poll: every parked slot re-sends its withheld
+                # report; the service answers "parked" until the rung
+                # cohort (possibly spanning other hosts) is complete, then
+                # promote/demote come back as continue/stop
+                self._poll_parked(driver, t0)
+                poll_at = now + self.park_poll_interval
             if self.n_active == 0:
+                if self._any_parked():
+                    # the cohort is waiting on another host — keep leases
+                    # warm and poll again shortly
+                    time.sleep(min(self.park_poll_interval, 0.05))
+                    continue
                 if exhausted:
                     break
                 time.sleep(min(max(retry_at - time.monotonic(), 0.01), 0.5))
@@ -546,14 +553,15 @@ class PopulationEngine:
                     continue
                 score = (float(fin_sum[i]) - meta.start_sum) / max(n, 1.0)
                 t_now = time.monotonic() - t0
-                if self._rung_set and meta.phase in self._rung_set:
-                    # rung phase: withhold the report, park the slot until
-                    # the generation barrier ranks the cohort
+                decision = driver.report(meta.trial_id, meta.phase, score,
+                                         meta.phase_t0, t_now)
+                if decision == "parked":
+                    # rung phase: the service withheld the report at the
+                    # barrier — mask the slot (state frozen on device) and
+                    # keep the exact report for the barrier polls
                     meta.pending = (score, meta.phase_t0, t_now)
                     bucket.park(i)
                     continue
-                decision = driver.report(meta.trial_id, meta.phase, score,
-                                         meta.phase_t0, t_now)
                 self.records.append((meta.trial_id, meta.slot_id, meta.phase,
                                      meta.phase_t0, t_now, score))
                 if decision == "stop":
@@ -565,68 +573,46 @@ class PopulationEngine:
                     meta.start_sum = float(fin_sum[i])
                     meta.phase_t0 = t_now
 
-    # -- rung barriers (on-device successive halving) -----------------------
+    # -- rung barriers (service-side successive halving) --------------------
     def _any_parked(self) -> bool:
         return any(m is not None and not b.active[i]
                    for b in self.buckets.values()
                    for i, m in enumerate(b.meta))
 
-    def _resolve_rungs(self, driver, t0: float) -> None:
-        """Rank each rung cohort, demote the bottom ``1/eta`` of it, report
-        every parked trial (demotions ride the report's ``demote`` flag),
-        and unpark the survivors into their next phase. Freed slots are
-        hot-swapped with fresh configurations by the admission path on the
-        next loop iteration."""
-        cohorts: Dict[int, List[Tuple[Bucket, int, SlotMeta]]] = {}
+    def _poll_parked(self, driver, t0: float) -> None:
+        """The thin-client side of the service's rung barrier: re-send each
+        parked slot's withheld report. ``"parked"`` → the cohort (possibly
+        spanning other hosts) is still filling, keep waiting; ``"continue"``
+        → promoted, unpark into the next phase; ``"stop"`` → demoted (or
+        the lease is gone), free the slot for the admission path to
+        hot-swap a fresh configuration."""
         for bucket in self.buckets.values():
-            for i, meta in enumerate(bucket.meta):
-                if meta is not None and not bucket.active[i] \
-                        and meta.pending is not None:
-                    cohorts.setdefault(meta.phase, []).append(
-                        (bucket, i, meta))
-        counters: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
-        for phase in sorted(cohorts):
-            group = cohorts[phase]
-            # the ranking itself runs on device: one argsort over the
-            # cohort's metrics (ties broken by admission order — argsort
-            # is stable)
-            metrics = jnp.asarray([m.pending[0] for _, _, m in group],
-                                  jnp.float32)
-            order = np.asarray(jnp.argsort(metrics))
-            n_demote = len(group) // self.bracket_eta
-            demoted_j = set(order[:n_demote].tolist())
-            demoted, promoted, stopped = [], [], []
-            for j, (bucket, i, meta) in enumerate(group):
+            counters: Optional[Tuple[np.ndarray, np.ndarray]] = None
+            for i in range(bucket.capacity):
+                meta = bucket.meta[i]
+                if meta is None or bucket.active[i] or meta.pending is None:
+                    continue
                 score, ts, te = meta.pending
-                dem = j in demoted_j
                 decision = driver.report(meta.trial_id, meta.phase, score,
-                                         ts, te, demote=dem)
+                                         ts, te)
+                if decision == "parked":
+                    continue
                 self.records.append((meta.trial_id, meta.slot_id, meta.phase,
                                      ts, te, score))
-                if dem or decision == "stop":
-                    # a survivor the driver stopped anyway (stale lease,
-                    # policy stop) is logged apart from the rung demotions
-                    (demoted if dem else stopped).append(meta.trial_id)
+                meta.pending = None
+                if decision == "stop":
                     bucket.release(i)
                     continue
-                promoted.append(meta.trial_id)
-                if bucket.t_max not in counters:
-                    counters[bucket.t_max] = (
-                        np.asarray(bucket.loop.finished_n),
-                        np.asarray(bucket.loop.finished_sum))
-                fin_n, fin_sum = counters[bucket.t_max]
-                meta.pending = None
+                if counters is None:
+                    counters = (np.asarray(bucket.loop.finished_n),
+                                np.asarray(bucket.loop.finished_sum))
+                fin_n, fin_sum = counters
                 meta.phase += 1
                 meta.updates_in_phase = 0
                 meta.start_n = float(fin_n[i])
                 meta.start_sum = float(fin_sum[i])
                 meta.phase_t0 = time.monotonic() - t0
                 bucket.unpark(i)
-            entry = {"phase": phase, "n": len(group),
-                     "demoted": demoted, "promoted": promoted}
-            if stopped:
-                entry["stopped"] = stopped
-            self.rung_log.append(entry)
 
     def _abandon(self, trial_ids: set) -> None:
         for bucket in self.buckets.values():

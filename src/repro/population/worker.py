@@ -80,9 +80,13 @@ def main(argv=None) -> int:
                          "devices (shard_map); forces the CPU device count "
                          "via XLA_FLAGS on CPU-only hosts")
     ap.add_argument("--bracket", action="store_true",
-                    help="on-device successive-halving rungs (bottom 1/eta "
-                         "of each rung cohort demoted; demotions ride the "
-                         "REPORT verb's demote flag)")
+                    help="join the server-side successive-halving bracket: "
+                         "acquires carry the rung-0 refill hint and rung-"
+                         "phase reports park until the cohort — pooled "
+                         "across every participating host — resolves. The "
+                         "demotion factor eta is the SERVER's (set where "
+                         "the service is built); --eta here only marks "
+                         "participation")
     ap.add_argument("--eta", type=int, default=3)
     args = ap.parse_args(argv)
 
