@@ -1,0 +1,89 @@
+"""PBT exploit/explore cost: on-device slot-to-slot clones against the
+host-round-trip baseline.
+
+A CLONE verdict on the population engine is executed as a device-side
+``a.at[dst].set(a[src])`` over the bucket's stacked params + optimizer
+state (``Bucket.clone_slot``) — the weights never leave the device. The
+baseline is what a clone costs when the learner state detours through the
+host (``device_get`` the parent slot, ``.at[].set`` the materialized
+arrays back), which is the shape every parameter-server-style PBT pays
+per exploit. Clones/second of both paths, plus the ratio, land in
+``BENCH_population_pbt.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+CAPACITY = 8
+N_CLONES = 30
+T_MAX = 8
+
+
+def _built_engine():
+    from repro.population.engine import PopulationEngine, TrialLease
+    engine = PopulationEngine("pong", max_slots=CAPACITY, n_envs=16,
+                              episodes_per_phase=10 ** 9,
+                              max_updates=10 ** 9, seed=0)
+    for i in range(CAPACITY):
+        engine.admit(TrialLease(i, {"learning_rate": 1e-3 * (1 + i),
+                                    "t_max": T_MAX, "gamma": 0.99}))
+    return engine
+
+
+def _block(bucket):
+    import jax
+    jax.block_until_ready((bucket.params, bucket.opt_state))
+
+
+def bench_population_pbt():
+    import jax
+    engine = _built_engine()
+    bucket = engine.buckets[T_MAX]
+    rng = np.random.default_rng(0)
+    pairs = [tuple(rng.choice(CAPACITY, 2, replace=False))
+             for _ in range(N_CLONES)]
+
+    # warm both paths once (device put/get layouts, dispatch)
+    bucket.clone_slot(1, bucket, 0, 1e-3, 0.99, 0.01)
+    _block(bucket)
+
+    t0 = time.perf_counter()
+    for src, dst in pairs:
+        bucket.clone_slot(int(dst), bucket, int(src), 1e-3, 0.99, 0.01)
+    _block(bucket)
+    device_s = time.perf_counter() - t0
+
+    def host_clone(src, dst):
+        # the round-trip baseline: parent weights materialize on the host,
+        # then re-upload into the child's slot
+        host_p = jax.tree.map(lambda a: np.asarray(a[src]), bucket.params)
+        host_o = jax.tree.map(lambda a: np.asarray(a[src]),
+                              bucket.opt_state)
+        bucket.params = jax.tree.map(lambda a, h: a.at[dst].set(h),
+                                     bucket.params, host_p)
+        bucket.opt_state = jax.tree.map(lambda a, h: a.at[dst].set(h),
+                                        bucket.opt_state, host_o)
+
+    host_clone(0, 1)
+    _block(bucket)
+    t0 = time.perf_counter()
+    for src, dst in pairs:
+        host_clone(int(src), int(dst))
+    _block(bucket)
+    host_s = time.perf_counter() - t0
+
+    n_params = sum(int(np.prod(a.shape[1:]))
+                   for a in jax.tree.leaves(bucket.params))
+    dev_rate = N_CLONES / device_s
+    host_rate = N_CLONES / host_s
+    return [
+        ("pbt/clone_on_device_per_s", float(dev_rate),
+         f"capacity={CAPACITY} params/slot={n_params}"),
+        ("pbt/clone_host_roundtrip_per_s", float(host_rate),
+         "device_get parent -> set child"),
+        ("pbt/device_over_host", float(dev_rate / max(host_rate, 1e-9)),
+         f"{N_CLONES} clones each"),
+    ]

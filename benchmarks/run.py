@@ -32,6 +32,7 @@ def _suites(fast: bool):
     ]
     if not fast:
         from benchmarks import multihost_benches as mhb
+        from benchmarks import pbt_benches as pbt
         from benchmarks import population_benches as pb
         from benchmarks import sharded_benches as shb
         suites += [
@@ -42,6 +43,7 @@ def _suites(fast: bool):
             ("population_throughput", pb.bench_population_throughput),
             ("sharded_population", shb.bench_sharded_population),
             ("population_multihost", mhb.bench_population_multihost),
+            ("population_pbt", pbt.bench_population_pbt),  # clone cost
         ]
     return suites
 

@@ -38,13 +38,20 @@ def rung_demotions(n: int, eta: int) -> int:
     return n // eta
 
 
-def demote_indices(metrics: list, eta: int) -> set:
+def bottom_indices(metrics: list, k: int) -> set:
     """Indices (into ``metrics``'s order — the cohort's park order) of the
-    members a rung barrier demotes: a single stable ascending argsort over
-    float32 metrics (matching the on-device ranking dtype), bottom
-    ``rung_demotions`` taken, ties broken by position."""
+    bottom ``k`` members: ONE stable ascending argsort over float32
+    metrics (matching the on-device ranking dtype), ties broken by
+    position. The single ranking rule every rung scheduler shares — the
+    bottom-1/eta barrier and Hyperband's keep-top-1/eta both slice it."""
     order = np.argsort(np.asarray(metrics, np.float32), kind="stable")
-    return set(order[:rung_demotions(len(metrics), eta)].tolist())
+    return set(order[:max(0, k)].tolist())
+
+
+def demote_indices(metrics: list, eta: int) -> set:
+    """The members a bottom-1/eta rung barrier demotes: the bottom
+    ``rung_demotions`` of the stable ranking."""
+    return bottom_indices(metrics, rung_demotions(len(metrics), eta))
 
 
 class ASHA(AsyncPolicy):

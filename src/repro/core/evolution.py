@@ -14,11 +14,8 @@ from __future__ import annotations
 import math
 from typing import Optional
 
-import numpy as np
-
 from repro.core.hypertrick import HyperTrick
-from repro.core.search_space import (Categorical, LogUniform, QLogUniform,
-                                     SearchSpace, Uniform)
+from repro.core.search_space import SearchSpace, perturb_hparams
 
 
 class EvolutionaryHyperTrick(HyperTrick):
@@ -30,27 +27,9 @@ class EvolutionaryHyperTrick(HyperTrick):
         self.mutate_prob = mutate_prob
 
     def _mutate(self, hp: dict) -> dict:
-        out = dict(hp)
-        for name, param in self.space.params.items():
-            v = out[name]
-            if isinstance(param, LogUniform):
-                out[name] = float(np.clip(v * self.rng.choice([0.5, 0.8,
-                                                               1.25, 2.0]),
-                                          param.lo, param.hi))
-            elif isinstance(param, QLogUniform):
-                out[name] = int(np.clip(round(v * self.rng.choice(
-                    [0.5, 0.8, 1.25, 2.0])), param.lo, param.hi))
-            elif isinstance(param, Categorical):
-                vals = list(param.values)
-                i = vals.index(v) if v in vals else 0
-                j = int(np.clip(i + self.rng.choice([-1, 0, 1]), 0,
-                                len(vals) - 1))
-                out[name] = vals[j]
-            elif isinstance(param, Uniform):
-                span = 0.2 * (param.hi - param.lo)
-                out[name] = float(np.clip(v + self.rng.uniform(-span, span),
-                                          param.lo, param.hi))
-        return out
+        # the same per-parameter perturbation the PBT scheduler applies to
+        # mid-flight clones — here it seeds a freed node's restart
+        return perturb_hparams(self.space, hp, self.rng)
 
     def next_hparams(self) -> Optional[dict]:
         if self._launched >= self.w0:

@@ -108,7 +108,10 @@ class ThreadCluster:
 
         with ThreadPoolExecutor(self.n_nodes) as pool:
             list(pool.map(node_loop, range(self.n_nodes)))
-        return ExecResult(svc, records, time.monotonic() - t0, self.n_nodes)
+        clone_log = getattr(svc.scheduler, "clone_log", None)
+        return ExecResult(svc, records, time.monotonic() - t0, self.n_nodes,
+                          extra={"clones": len(clone_log)}
+                          if clone_log else None)
 
 
 class ProcessCluster:
@@ -147,6 +150,10 @@ class ProcessCluster:
         # leasing up to this many trials at once (RL objectives only)
         self.slots = slots
         self.bracket_eta = bracket_eta
+        # do workers join the server-side rung barrier (--bracket)? Updated
+        # in run() once the service exists: a first-class Scheduler
+        # (Hyperband) declares its own brackets without bracket_eta
+        self._workers_bracket = bracket_eta is not None
         # how long workers may linger once the service is drained (no
         # leases, no requeued configs) before the launcher presumes them
         # hung and kills them; None -> 3 lease TTLs (>= 30 s)
@@ -161,7 +168,7 @@ class ProcessCluster:
                "--heartbeat-interval", str(self.heartbeat_interval)]
         if self.slots > 1:
             cmd += ["--slots", str(self.slots)]
-        if self.bracket_eta is not None:
+        if self._workers_bracket:
             cmd += ["--bracket"]
         return cmd
 
@@ -223,11 +230,14 @@ class ProcessCluster:
         from repro.distributed.server import MetaoptServer
 
         svc = OptimizationService(policy, bracket_eta=self.bracket_eta)
+        # a first-class Scheduler (Hyperband) brings its own brackets:
+        # workers must join the barrier even without bracket_eta
+        self._workers_bracket = svc.barrier is not None
         # bracket entry cohorts are sized to real capacity: the first waits
         # for min(total worker slots, budget) enrollments (seeded via the
-        # server's bracket_capacity below), and a fully-parked cohort
-        # missing dead capacity resolves after the patience window instead
-        # of wedging
+        # server's bracket_capacity below, split across brackets by the
+        # scheduler), and a fully-parked cohort missing dead capacity
+        # resolves after the patience window instead of wedging
         capacity = self.n_nodes * self.slots
         budget = (getattr(policy, "n_trials", None)
                   or getattr(policy, "w0", None))
@@ -271,6 +281,9 @@ class ProcessCluster:
             extra["worker_exit_codes"] = rcs
         if svc.barrier is not None and svc.barrier.rung_log:
             extra["rungs"] = svc.barrier.rung_log
+        clone_log = getattr(svc.scheduler, "clone_log", None)
+        if clone_log:
+            extra["clones"] = len(clone_log)
         records = [ExecRecord(tid, node if node is not None else -1, phase,
                               ts, te, metric)
                    for tid, node, phase, ts, te, metric in server.report_log]
@@ -348,9 +361,17 @@ class PopulationCluster:
             from repro.core.completion import demotion_alpha, demotion_bracket
             extra["rungs"] = svc.barrier.rung_log
             br = demotion_bracket(slots, self.bracket_eta,
-                                  svc.barrier.rungs, policy.n_phases)
+                                  list(svc.barrier.rungs), policy.n_phases)
             extra["bracket"] = {"n": br.n, "r": br.r}
             extra["bracket_alpha"] = round(demotion_alpha(br), 4)
+        if engine.speculated:
+            extra["speculative_refills"] = engine.speculated
+        clone_log = getattr(svc.scheduler, "clone_log", None)
+        if clone_log:
+            # clone verdicts issued vs the ones executed as device-side
+            # slot copies (a parent may have left its slot already)
+            extra["clones"] = len(clone_log)
+            extra["clones_on_device"] = engine.clones
         return ExecResult(svc, records, wall, slots,
                           env_steps=engine.total_env_steps, extra=extra)
 

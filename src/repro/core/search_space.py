@@ -85,6 +85,41 @@ class SearchSpace:
         return [self.sample(rng) for _ in range(n)]
 
 
+def perturb_hparams(space: SearchSpace, hparams: Dict[str, Any],
+                    rng: np.random.Generator,
+                    frozen: Sequence[str] = ()) -> Dict[str, Any]:
+    """PBT-style explore: a mutated copy of ``hparams``, each parameter
+    nudged within its own bounds/type. Continuous log-scale values scale by
+    one of {0.5, 0.8, 1.25, 2.0}; categoricals step to a neighbour; uniform
+    values jitter by 20% of the range. ``frozen`` names are copied through
+    untouched — the population engine freezes *structural* hyperparameters
+    (``t_max``) so a perturbed trial never has to migrate buckets. Shared
+    by ``EvolutionaryHyperTrick`` (restart-time mutation) and
+    ``PBTScheduler`` (mid-flight clone+perturb)."""
+    out = dict(hparams)
+    for name, param in space.params.items():
+        if name in frozen or name not in out:
+            continue
+        v = out[name]
+        if isinstance(param, LogUniform):
+            out[name] = float(np.clip(
+                v * rng.choice([0.5, 0.8, 1.25, 2.0]), param.lo, param.hi))
+        elif isinstance(param, QLogUniform):
+            out[name] = int(np.clip(
+                round(v * rng.choice([0.5, 0.8, 1.25, 2.0])),
+                param.lo, param.hi))
+        elif isinstance(param, Categorical):
+            vals = list(param.values)
+            i = vals.index(v) if v in vals else 0
+            j = int(np.clip(i + rng.choice([-1, 0, 1]), 0, len(vals) - 1))
+            out[name] = vals[j]
+        elif isinstance(param, Uniform):
+            span = 0.2 * (param.hi - param.lo)
+            out[name] = float(np.clip(v + rng.uniform(-span, span),
+                                      param.lo, param.hi))
+    return out
+
+
 def paper_rl_space() -> SearchSpace:
     """The exact space of paper §5.1."""
     return SearchSpace({

@@ -11,6 +11,7 @@ import threading
 from dataclasses import dataclass
 from typing import Any, Dict, Optional
 
+from repro.core.scheduler import ReportReply
 from repro.distributed import protocol as proto
 
 
@@ -82,16 +83,21 @@ class ServiceClient:
 
     def report(self, trial_id: int, phase: int, metric: float,
                t_start: float = 0.0, t_end: float = 0.0,
-               node: Optional[int] = None, demote: bool = False) -> str:
+               node: Optional[int] = None, demote: bool = False
+               ) -> ReportReply:
         """The server's decision: ``"continue"``, ``"stop"``, or — bracket
         mode — ``"parked"`` (the report is withheld at the rung barrier;
         keep the trial's state and poll by re-sending the identical
-        report)."""
+        report). Returned as a ``ReportReply``: a plain decision string
+        that additionally carries the PBT ``clone_from``/``perturb``
+        payload when the scheduler issued a clone verdict."""
         resp = self._call(proto.ReportRequest(
             trial_id=trial_id, phase=phase, metric=float(metric),
             t_start=t_start, t_end=t_end, node=node,
             demote=True if demote else None))
-        return resp.decision
+        return ReportReply(resp.decision,
+                           clone_from=getattr(resp, "clone_from", None),
+                           perturb=getattr(resp, "perturb", None))
 
     def heartbeat(self, trial_id: int) -> bool:
         return self._call(proto.HeartbeatRequest(trial_id=trial_id)).ok

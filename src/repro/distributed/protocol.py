@@ -103,7 +103,13 @@ class AcquireResponse:
     # Omitted from the wire when None so pre-slots clients (strict decode,
     # no batch field) keep working against an upgraded server.
     batch: Optional[list] = None
-    OMIT_IF_NONE = ("batch",)
+    # which scheduler bracket the primary lease joined (full Hyperband runs
+    # several concurrently; the barrier keys cohorts by (bracket_id, rung)).
+    # Omitted when the search has a single implicit bracket, so the frame
+    # stays byte-identical for every pre-Hyperband search; batch entries
+    # carry their own "bracket_id" key under the same rule.
+    bracket_id: Optional[int] = None
+    OMIT_IF_NONE = ("batch", "bracket_id")
 
 
 @message("report_ok")
@@ -112,6 +118,16 @@ class ReportResponse:
     # the report is withheld at the rung barrier: keep the trial's state,
     # keep heartbeating, and poll by re-sending the identical report
     decision: str
+    # PBT exploit/explore (scheduler CLONE verdicts): continue the trial
+    # as a clone of ``clone_from``'s learner state, under the ``perturb``
+    # hyperparameters. The population engine executes the copy device-side
+    # (weights never leave the device); scalar workers adopt ``perturb``
+    # and keep their own state. Both omitted when None, so every
+    # non-clone frame is byte-identical to a classic report_ok and an old
+    # worker simply continues un-cloned (degraded, not broken).
+    clone_from: Optional[int] = None
+    perturb: Optional[Dict[str, Any]] = None
+    OMIT_IF_NONE = ("clone_from", "perturb")
 
 
 @message("heartbeat_ok")

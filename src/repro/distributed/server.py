@@ -15,6 +15,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.scheduler import Verdict, VerdictKind
 from repro.core.service import Decision, OptimizationService, TrialStatus
 from repro.distributed import protocol as proto
 from repro.distributed.journal import Journal
@@ -185,13 +186,23 @@ class MetaoptServer:
                 return proto.AcquireResponse(None, None, n_phases,
                                              retry_after=retry)
         for rec in recs:
-            self._journal({"ev": "acquire", "trial_id": rec.trial_id,
-                           "hparams": rec.hparams, "node": rec.node,
-                           "requeued": rec.requeued, "t": rec.start_time})
-        batch = [{"trial_id": r.trial_id, "hparams": r.hparams}
-                 for r in recs[1:]] or None
+            ev = {"ev": "acquire", "trial_id": rec.trial_id,
+                  "hparams": rec.hparams, "node": rec.node,
+                  "requeued": rec.requeued, "t": rec.start_time}
+            if rec.bracket_id:
+                ev["bracket"] = rec.bracket_id
+            self._journal(ev)
+
+        def batch_entry(r):
+            entry = {"trial_id": r.trial_id, "hparams": r.hparams}
+            if r.bracket_id:
+                entry["bracket_id"] = r.bracket_id
+            return entry
+
+        batch = [batch_entry(r) for r in recs[1:]] or None
         return proto.AcquireResponse(recs[0].trial_id, recs[0].hparams,
-                                     n_phases, batch=batch)
+                                     n_phases, batch=batch,
+                                     bracket_id=recs[0].bracket_id or None)
 
     def _do_report(self, msg: proto.ReportRequest):
         rec = self.service.db.trials.get(msg.trial_id)
@@ -204,13 +215,15 @@ class MetaoptServer:
             if rec.status is TrialStatus.CRASHED:
                 return proto.ReportResponse(decision="stop")
             n_before = rec.phases_completed
-            decision = self.service.report(msg.trial_id, msg.phase,
-                                           msg.metric, t_start=msg.t_start,
-                                           t_end=msg.t_end, node=msg.node)
+            verdict = self.service.report_verdict(
+                msg.trial_id, msg.phase, msg.metric, t_start=msg.t_start,
+                t_end=msg.t_end, node=msg.node)
+            decision = verdict.decision
             if getattr(msg, "demote", None):
                 # client-side rung demotion (pre-barrier population
                 # engines): metric recorded above, trial killed here
                 self.service.stop_trial(msg.trial_id)
+                verdict = Verdict.STOP
                 decision = Decision.STOP
             if decision.value == "stop":
                 self._leases.pop(msg.trial_id, None)
@@ -234,6 +247,12 @@ class MetaoptServer:
             self._journal({"ev": "report", "trial_id": msg.trial_id,
                            "phase": msg.phase, "metric": msg.metric,
                            "t": report_t})
+            if verdict.kind is VerdictKind.CLONE:
+                # the trial's live hparams became the perturbed ones: a
+                # replayed journal must rebuild the same configuration
+                self._journal({"ev": "perturb", "trial_id": msg.trial_id,
+                               "hparams": verdict.perturb,
+                               "clone_from": verdict.clone_from})
             if rec.status is not TrialStatus.RUNNING:
                 self._journal_status(msg.trial_id)
             node = msg.node if msg.node is not None else rec.node
@@ -241,7 +260,9 @@ class MetaoptServer:
                 self.report_log.append((msg.trial_id, node, msg.phase,
                                         msg.t_start, msg.t_end, msg.metric))
         self._absorb_resolved(resolved)
-        return proto.ReportResponse(decision=decision.value)
+        return proto.ReportResponse(decision=decision.value,
+                                    clone_from=verdict.clone_from,
+                                    perturb=verdict.perturb)
 
     def _absorb_resolved(self, resolved) -> None:
         """Journal + log the withheld reports a barrier resolution just
@@ -281,9 +302,12 @@ class MetaoptServer:
         if rec is None or rec.status is not TrialStatus.RUNNING:
             return
         self.service.crash(trial_id)
-        self.service.requeue(rec.hparams)
+        self.service.requeue(rec.hparams, rec.bracket_id)
         self._journal_status(trial_id)
-        self._journal({"ev": "requeue", "hparams": rec.hparams})
+        ev = {"ev": "requeue", "hparams": rec.hparams}
+        if rec.bracket_id:
+            ev["bracket"] = rec.bracket_id
+        self._journal(ev)
         # reaper-shrink: the dead trial leaves its rung cohort (parked or
         # not), and if the shrunken cohort is now complete the barrier
         # resolves here instead of wedging on a dead host

@@ -174,6 +174,12 @@ class WorkerAgent:
                     time.sleep(self.park_poll_interval)
                 if decision == "stop":
                     return
+                if getattr(decision, "perturb", None) is not None:
+                    # PBT clone verdict: a scalar worker cannot copy a
+                    # remote parent's weights (they never cross hosts), so
+                    # it adopts the perturbed hyperparameters and keeps
+                    # its own trainer state
+                    trial.hparams = dict(decision.perturb)
         finally:
             self._active = None
 

@@ -57,6 +57,20 @@ def main():
     ap.add_argument("--synthetic-sleep", type=float, default=0.05)
     ap.add_argument("--policy", choices=["hypertrick", "random"],
                     default="hypertrick")
+    ap.add_argument("--scheduler",
+                    choices=["hypertrick", "random", "hyperband", "pbt"],
+                    default=None,
+                    help="trial-lifecycle scheduler (core.scheduler): "
+                         "hypertrick/random keep the classic async "
+                         "policies (same results as --policy); hyperband "
+                         "runs EVERY bracket of the (eta, R=--phases) "
+                         "construction concurrently through the service's "
+                         "rung barrier, cohorts keyed by (bracket_id, "
+                         "rung) — backends process/server; pbt runs a "
+                         "population of --workers trials with exploit/"
+                         "explore CLONE verdicts — on --backend vectorized "
+                         "the clone is a device-side slot-to-slot copy of "
+                         "the parent's weights")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend",
                     choices=["thread", "process", "server", "vectorized"],
@@ -109,13 +123,32 @@ def main():
     else:
         space = synthetic_space()
 
-    if args.bracket:
-        # engine-side rung demotion needs a pure sampler upstream: the W0
+    scheduler = args.scheduler or args.policy
+    if scheduler == "hyperband":
+        if args.bracket:
+            ap.error("--scheduler hyperband IS a bracket scheduler (every "
+                     "(eta, R) bracket runs concurrently); drop --bracket")
+        if args.backend not in ("process", "server"):
+            ap.error("--scheduler hyperband pools its bracket cohorts at "
+                     "the server-side rung barrier; use --backend process "
+                     "or server")
+        from repro.core.scheduler import HyperbandScheduler
+        policy = HyperbandScheduler(space, n_phases=args.phases,
+                                    eta=args.eta, seed=args.seed)
+    elif scheduler == "pbt":
+        if args.bracket:
+            ap.error("--scheduler pbt is asynchronous (no rung barrier); "
+                     "drop --bracket")
+        from repro.core.scheduler import PBTScheduler
+        policy = PBTScheduler(space, population=args.workers,
+                              n_phases=args.phases, seed=args.seed)
+    elif args.bracket:
+        # rung demotion needs a pure sampler upstream: the W0
         # configurations come from the service, every eviction decision is
-        # the engine's on-device ranking
+        # the barrier's ranking
         policy = RandomSearchPolicy(space, args.workers, args.phases,
                                     seed=args.seed)
-    elif args.policy == "hypertrick":
+    elif scheduler == "hypertrick":
         policy = HyperTrick(space, args.workers, args.phases,
                             args.eviction_rate, seed=args.seed)
     else:
@@ -129,7 +162,7 @@ def main():
         ap.error("--bracket needs the service-side rung barrier; use "
                  "--backend vectorized (one host) or process/server "
                  "(multi-host brackets)")
-    if args.bracket and args.eta < 2:
+    if (args.bracket or scheduler == "hyperband") and args.eta < 2:
         ap.error("--eta must be >= 2 (demote bottom 1/eta per rung)")
 
     if args.backend == "vectorized":

@@ -98,9 +98,13 @@ class LocalDriver:
         return leases, None
 
     def report(self, trial_id: int, phase: int, metric: float,
-               t_start: float, t_end: float) -> str:
-        return self.service.report(trial_id, phase, metric,
-                                   t_start=t_start, t_end=t_end).value
+               t_start: float, t_end: float) -> "ReportReply":
+        from repro.core.scheduler import ReportReply
+        verdict = self.service.report_verdict(trial_id, phase, metric,
+                                              t_start=t_start, t_end=t_end)
+        return ReportReply(verdict.decision.value,
+                           clone_from=verdict.clone_from,
+                           perturb=verdict.perturb)
 
     def poll_lost(self) -> set:
         """Trials whose lease was revoked out from under us (remote only)."""
@@ -249,6 +253,24 @@ class Bucket:
         self.meta[i] = meta
         self._hyper_dev = None
 
+    def clone_slot(self, dst: int, src_bucket: "Bucket", src: int,
+                   lr: float, gamma: float, beta: float) -> None:
+        """PBT exploit: copy ``src_bucket``'s slot ``src`` learner state
+        (params + optimizer state — NOT the env/loop state: the clone
+        keeps exploring its own environments) into slot ``dst``, entirely
+        device-side (one jitted slot-copy executable, weights never
+        materialize on the host), and install the perturbed continuous
+        hyperparameters. Network and optimizer shapes are
+        t_max-independent, so the source may live in a different bucket of
+        the same engine."""
+        place = self.engine._place
+        state = ((self.params, self.opt_state),
+                 (src_bucket.params, src_bucket.opt_state))
+        (self.params, self.opt_state) = place(
+            _clone_slot_step(state[0], state[1], src, dst))
+        self.lr[dst], self.gamma[dst], self.beta[dst] = lr, gamma, beta
+        self._hyper_dev = None
+
     def release(self, i: int) -> None:
         """Device-side eviction: mask the slot; its params stop updating
         (frozen by the step's ``where``) until a fresh config is swapped in."""
@@ -275,6 +297,21 @@ class Bucket:
                 (self.lr, self.gamma, self.beta, self.active))
         self.params, self.opt_state, self.loop = self._step(
             self.params, self.opt_state, self.loop, *self._hyper_dev)
+
+
+@jax.jit
+def _clone_slot_step(dst_state, src_state, src: int, dst: int):
+    """The whole PBT slot copy as ONE jitted executable: every leaf of the
+    destination learner state gets the source slot's row. ``src``/``dst``
+    are traced scalars, so one compilation (per tree structure) serves
+    every clone the search ever performs. (No donation: for a same-bucket
+    clone the destination leaves ARE the source leaves, and donating an
+    aliased input just trades the copy for an XLA warning.)"""
+    return jax.tree.map(
+        lambda d, s: jax.lax.dynamic_update_index_in_dim(
+            d, jax.lax.dynamic_index_in_dim(s, src, 0, keepdims=False),
+            dst, 0),
+        dst_state, src_state)
 
 
 # full-unroll ceiling: XLA:CPU won't parallelize inside while loops, so
@@ -403,9 +440,20 @@ class PopulationEngine:
         # seconds between barrier polls of parked slots while other slots
         # still train (an idle host polls continuously instead)
         self.park_poll_interval = 0.2
+        # speculative rung-0 refill: once every local slot is parked at a
+        # rung barrier, the bottom 1/eta of them WILL be demoted when the
+        # cohort resolves — acquire (and start training) that many fresh
+        # entrants immediately instead of idling them across the verdict
+        # poll's round-trip. Exact on a single host; on a multi-host
+        # bracket it is the local fair share (the pooled demotions may
+        # land elsewhere, in which case occupancy transiently exceeds
+        # max_slots and the admission gate self-corrects).
+        self.speculative_refill = True
         self.buckets: Dict[int, Bucket] = {}
         self.total_env_steps = 0       # active-lane env transitions
         self.total_updates = 0
+        self.clones = 0                # on-device PBT slot copies executed
+        self.speculated = 0            # leases acquired by speculative refill
         self._slot_counter = 0
         self.records: List[Tuple] = []  # (trial_id, slot, phase, t0, t1, m)
 
@@ -497,10 +545,28 @@ class PopulationEngine:
         poll_at = 0.0
         while True:
             now = time.monotonic()
-            if (not exhausted and self.n_occupied < self.max_slots
-                    and now >= retry_at):
-                leases, retry = driver.acquire_many(
-                    self.max_slots - self.n_occupied, rung=self._rung_hint)
+            want = 0
+            if not exhausted and now >= retry_at:
+                if self.n_occupied < self.max_slots:
+                    want = self.max_slots - self.n_occupied
+                elif (self.speculative_refill and self.bracket_eta
+                      and self.n_active == 0 and self._any_parked()):
+                    # speculative rung-0 refill: the local cohort is fully
+                    # parked; acquire the entrants its demotions will make
+                    # room for BEFORE the verdict polls return, so freed
+                    # slots never idle across the barrier round-trip (the
+                    # service resolves any ready cohort before enrolling
+                    # them, so they land in the next generation)
+                    from repro.core.asha import rung_demotions
+                    want = (self.max_slots
+                            + rung_demotions(self._n_parked(),
+                                             self.bracket_eta)
+                            - self.n_occupied)
+            if want > 0:
+                leases, retry = driver.acquire_many(want,
+                                                    rung=self._rung_hint)
+                if self.n_occupied >= self.max_slots:
+                    self.speculated += len(leases)
                 if leases:
                     self._admit_grouped(leases, now - t0)
                 elif retry is None:
@@ -567,17 +633,60 @@ class PopulationEngine:
                 if decision == "stop":
                     bucket.release(i)
                 else:
+                    if getattr(decision, "clone_from", None) is not None:
+                        # PBT exploit/explore: the verdict rode the report
+                        # reply — execute the copy device-side and adopt
+                        # the perturbed hyperparameters before continuing
+                        self._exploit(bucket, i, meta, decision)
                     meta.phase += 1
                     meta.updates_in_phase = 0
                     meta.start_n = float(fin_n[i])
                     meta.start_sum = float(fin_sum[i])
                     meta.phase_t0 = t_now
 
+    # -- PBT exploit/explore (CLONE verdicts) -------------------------------
+    def _find_slot(self, trial_id: int
+                   ) -> Optional[Tuple["Bucket", int]]:
+        for bucket in self.buckets.values():
+            for i, meta in enumerate(bucket.meta):
+                if meta is not None and meta.trial_id == trial_id:
+                    return bucket, i
+        return None
+
+    def _exploit(self, bucket: "Bucket", i: int, meta: SlotMeta,
+                 reply) -> None:
+        """Execute a CLONE verdict: the trial continues as a copy of
+        ``reply.clone_from``'s learner state under ``reply.perturb``.
+        When the parent occupies a slot of THIS engine the copy is a
+        device-side slot-to-slot transfer (params + opt state; weights
+        never leave the device). A parent on another host — or one that
+        finished and left its slot — cannot ship its weights, so the
+        trial keeps its own learner state and only adopts the perturbed
+        hyperparameters (documented degradation of remote clones)."""
+        hp = dict(reply.perturb) if reply.perturb else dict(meta.hparams)
+        lr = float(hp.get("learning_rate", meta.hparams["learning_rate"]))
+        gamma = float(hp.get("gamma", meta.hparams["gamma"]))
+        beta = float(hp.get("beta", 0.01))
+        src = self._find_slot(reply.clone_from)
+        if src is not None and src != (bucket, i):
+            src_bucket, j = src
+            bucket.clone_slot(i, src_bucket, j, lr, gamma, beta)
+            self.clones += 1
+        else:
+            bucket.lr[i], bucket.gamma[i], bucket.beta[i] = lr, gamma, beta
+            bucket._hyper_dev = None
+        meta.hparams = hp
+
     # -- rung barriers (service-side successive halving) --------------------
     def _any_parked(self) -> bool:
         return any(m is not None and not b.active[i]
                    for b in self.buckets.values()
                    for i, m in enumerate(b.meta))
+
+    def _n_parked(self) -> int:
+        return sum(1 for b in self.buckets.values()
+                   for i, m in enumerate(b.meta)
+                   if m is not None and not b.active[i])
 
     def _poll_parked(self, driver, t0: float) -> None:
         """The thin-client side of the service's rung barrier: re-send each

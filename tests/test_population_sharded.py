@@ -128,6 +128,33 @@ def test_bracket_end_to_end_summary():
     assert s["best_metric"] is not None
 
 
+def test_sharded_engine_and_bracket_compose():
+    """`tune.py --backend vectorized --devices 2 --bracket`: the
+    shard_map-sharded population engine and the service-side rung barrier
+    compose in one run — rung cohorts resolve over slots that live on two
+    (virtual) devices, driven end-to-end from the launcher CLI."""
+    import tempfile
+    out = tempfile.NamedTemporaryFile(suffix=".json", delete=False).name
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.tune",
+         "--backend", "vectorized", "--devices", "2", "--bracket",
+         "--eta", "2", "--objective", "rl", "--game", "pong",
+         "--workers", "4", "--phases", "2", "--episodes-per-phase", "2",
+         "--n-envs", "2", "--seed", "0", "--out", out],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    s = json.load(open(out))
+    os.remove(out)
+    assert s["devices"] == 2
+    rungs = s["rungs"]
+    assert rungs and rungs[0]["phase"] == 0
+    assert len(rungs[0]["demoted"]) == rungs[0]["n"] // 2
+    assert s["by_status"].get("killed", 0) == sum(
+        len(r["demoted"]) for r in rungs)
+    assert s["n_trials"] == 4
+
+
 # ---------------------------------------------------------------------------
 # the REPORT ``demote`` extension
 # ---------------------------------------------------------------------------
