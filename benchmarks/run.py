@@ -35,6 +35,7 @@ def _suites(fast: bool):
         from benchmarks import pbt_benches as pbt
         from benchmarks import population_benches as pb
         from benchmarks import sharded_benches as shb
+        from benchmarks import telemetry_benches as tb
         suites += [
             ("ga3c_throughput", sb.bench_ga3c_throughput),
             ("lm_train_step", sb.bench_lm_train_step),
@@ -44,6 +45,7 @@ def _suites(fast: bool):
             ("sharded_population", shb.bench_sharded_population),
             ("population_multihost", mhb.bench_population_multihost),
             ("population_pbt", pbt.bench_population_pbt),  # clone cost
+            ("telemetry_overhead", tb.bench_telemetry_overhead),
         ]
     return suites
 

@@ -183,7 +183,8 @@ class ProcessCluster:
         return [subprocess.Popen(self._worker_cmd(port, i), env=env)
                 for i in range(self.n_nodes)]
 
-    def _await_workers(self, procs, server, svc) -> List[int]:
+    def _await_workers(self, procs, server, svc,
+                       journal=None) -> List[int]:
         """Wait for every worker, but bounded: once the service is drained
         (no live leases, no requeued configs waiting for a taker) a healthy
         worker exits within one acquire round-trip, so any process still
@@ -198,6 +199,14 @@ class ProcessCluster:
                 # an exited worker's free capacity will never refill the
                 # bracket: stop the entry cohort waiting for it
                 svc.reduce_bracket_entrants(self.slots)
+                if journal is not None:
+                    # host churn, journaled WHEN it happened (the final
+                    # exit-code summary knows the codes but not the time):
+                    # the dashboard plots worker deaths from these. Replay
+                    # skips unknown event kinds, so old tooling is
+                    # unaffected.
+                    journal.append({"ev": "worker_exit", "node": i,
+                                    "exit_code": procs[i].poll()})
             dead_nodes = exited
             if len(exited) == len(procs):
                 break
@@ -260,7 +269,7 @@ class ProcessCluster:
         t0 = time.monotonic()
         try:
             procs = self.spawn_workers(server.port)
-            rcs = self._await_workers(procs, server, svc)
+            rcs = self._await_workers(procs, server, svc, journal=journal)
             wall = time.monotonic() - t0
         finally:
             server.stop()
@@ -350,7 +359,9 @@ class PopulationCluster:
             self.game, max_slots=slots, n_envs=self.n_envs,
             episodes_per_phase=self.episodes_per_phase,
             max_updates=self.max_updates, seed=self.seed, mesh=mesh,
-            bracket_eta=self.bracket_eta)
+            bracket_eta=self.bracket_eta,
+            # one registry per search: engine.* lands next to service.*
+            metrics=svc.metrics)
         t0 = time.monotonic()
         rows = engine.run(LocalDriver(svc))
         wall = time.monotonic() - t0

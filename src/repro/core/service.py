@@ -25,6 +25,7 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 from repro.core.scheduler import (BracketScheduler, Decision,
                                   PolicyScheduler, Scheduler, Verdict,
                                   VerdictKind)
+from repro.telemetry.metrics import MetricsRegistry
 
 import enum
 
@@ -178,6 +179,12 @@ class ParkedReport:
     t_start: float = 0.0
     t_end: float = 0.0
     node: Optional[int] = None
+    # env transitions the phase consumed (engine workers report it; scalar
+    # workers leave it None) — carried through the barrier so the journal
+    # entry written at resolution matches a non-parked report's
+    env_steps: Optional[int] = None
+    # service-clock time the report parked (telemetry: cohort wait)
+    t_parked: float = 0.0
     # set at resolution: the decision delivered to the worker's next poll,
     # and the service-clock time the report was recorded to the DB
     decision: Optional[Decision] = None
@@ -386,8 +393,13 @@ class OptimizationService:
     bookkeeping) and mapped to the transport ``Decision`` for workers."""
 
     def __init__(self, policy, clock=time.monotonic,
-                 bracket_eta: Optional[int] = None):
+                 bracket_eta: Optional[int] = None, metrics=None):
         self.db = KnowledgeDB()
+        # telemetry: latencies in real seconds (time.perf_counter — the cost
+        # of the code, even under a simulated ``clock``), waits in service-
+        # clock seconds (domain time — meaningful in trace replay too).
+        # Pass ``telemetry.NULL_REGISTRY`` to opt out entirely.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         if isinstance(policy, Scheduler):
             assert bracket_eta is None, (
                 "a Scheduler declares its own brackets; bracket_eta only "
@@ -419,6 +431,7 @@ class OptimizationService:
         budget slot goes back to the pool without charging the policy."""
         with self._lock:
             self._requeue.append((hparams, bracket_id))
+            self.metrics.counter("service.requeues").inc()
 
     def acquire_trial(self, node: Optional[int] = None,
                       rung: Optional[int] = None) -> Optional[TrialRecord]:
@@ -434,6 +447,15 @@ class OptimizationService:
         so a speculative entrant — acquired by an engine whose own cohort
         is still parked awaiting its verdict polls — always lands in the
         NEXT generation instead of wedging or inflating a completed one."""
+        t0 = time.perf_counter()
+        try:
+            return self._acquire_trial(node, rung)
+        finally:
+            self.metrics.histogram("service.acquire_s").observe(
+                time.perf_counter() - t0)
+
+    def _acquire_trial(self, node: Optional[int],
+                       rung: Optional[int]) -> Optional[TrialRecord]:
         with self._lock:
             requeued = False
             bracket_id = 0
@@ -464,22 +486,39 @@ class OptimizationService:
 
     def report(self, trial_id: int, phase: int, metric: float,
                t_start: float = 0.0, t_end: float = 0.0,
-               node: Optional[int] = None) -> Decision:
+               node: Optional[int] = None,
+               env_steps: Optional[int] = None) -> Decision:
         """The transport-level decision for a report (continue / stop /
         parked) — ``report_verdict`` narrowed for callers that do not
         execute clone verdicts."""
         return self.report_verdict(trial_id, phase, metric, t_start=t_start,
-                                   t_end=t_end, node=node).decision
+                                   t_end=t_end, node=node,
+                                   env_steps=env_steps).decision
 
     def report_verdict(self, trial_id: int, phase: int, metric: float,
                        t_start: float = 0.0, t_end: float = 0.0,
-                       node: Optional[int] = None) -> Verdict:
+                       node: Optional[int] = None,
+                       env_steps: Optional[int] = None) -> Verdict:
         """The full verdict pipeline: park/poll bookkeeping for enrolled
         trials, then the scheduler's verdict applied to the knowledge DB —
         including PBT clone verdicts, whose perturbed hyperparameters are
         swapped into the live trial record here (the in-process thread
         cluster picks them up by reference; the server forwards
-        ``clone_from``/``perturb`` on the wire)."""
+        ``clone_from``/``perturb`` on the wire).
+
+        ``env_steps`` is telemetry only: how many env transitions the
+        phase consumed. It never influences a verdict."""
+        t0 = time.perf_counter()
+        try:
+            return self._report_verdict(trial_id, phase, metric, t_start,
+                                        t_end, node, env_steps)
+        finally:
+            self.metrics.histogram("service.report_s").observe(
+                time.perf_counter() - t0)
+
+    def _report_verdict(self, trial_id: int, phase: int, metric: float,
+                        t_start: float, t_end: float, node: Optional[int],
+                        env_steps: Optional[int]) -> Verdict:
         with self._lock:
             b = self.barrier
             if b is not None and b.tracks(trial_id):
@@ -493,7 +532,10 @@ class OptimizationService:
                 if key is not None and key[1] == phase:
                     if not b.is_parked(trial_id):
                         b.park(ParkedReport(trial_id, phase, metric,
-                                            t_start, t_end, node))
+                                            t_start, t_end, node,
+                                            env_steps=env_steps,
+                                            t_parked=self.clock()))
+                        self.metrics.counter("service.verdicts.park").inc()
                     # the readiness check runs on PARKS and on POLLS: polls
                     # are what pick up late entrant-closures (budget spent
                     # on another connection) and the patience timeout.
@@ -506,12 +548,17 @@ class OptimizationService:
                     return Verdict.PARK
             now = self.clock()
             prior = self.db.report(trial_id, phase, metric, now)
+            if env_steps:
+                self.metrics.counter("service.env_steps").inc(env_steps)
             verdict = self.scheduler.on_report(trial_id, phase, metric,
                                                prior)
             if phase >= self.scheduler.n_phases - 1:
                 self._untrack(trial_id)
                 self.db.set_status(trial_id, TrialStatus.COMPLETED, now)
+                self.metrics.counter("service.verdicts.stop").inc()
                 return Verdict.STOP
+            self.metrics.counter(
+                "service.verdicts." + verdict.kind.value).inc()
             if verdict.kind in (VerdictKind.STOP, VerdictKind.DEMOTE):
                 self._untrack(trial_id)
                 self.db.set_status(trial_id, TrialStatus.KILLED, now)
@@ -547,12 +594,16 @@ class OptimizationService:
         demoted_j = self.scheduler.resolve_cohort(
             bracket_id, rung, [r.metric for r in group])
         now = self.clock()
+        wait_h = self.metrics.histogram("service.cohort_wait_s")
         demoted, promoted, stopped = [], [], []
         for j, rep in enumerate(group):
             prior = self.db.report(rep.trial_id, rep.phase, rep.metric, now)
             verdict = self.scheduler.on_report(rep.trial_id, rep.phase,
                                                rep.metric, prior)
             rep.t_recorded = now
+            wait_h.observe(max(0.0, now - rep.t_parked))
+            if rep.env_steps:
+                self.metrics.counter("service.env_steps").inc(rep.env_steps)
             del b._heading[rep.trial_id]
             if j in demoted_j or verdict.kind in (VerdictKind.STOP,
                                                   VerdictKind.DEMOTE):
@@ -563,8 +614,12 @@ class OptimizationService:
                 rep.decision = Decision.STOP
                 b._verdicts[rep.trial_id] = Verdict.DEMOTE \
                     if j in demoted_j else Verdict.STOP
+                self.metrics.counter(
+                    "service.verdicts.demote" if j in demoted_j
+                    else "service.verdicts.stop").inc()
             else:
                 promoted.append(rep.trial_id)
+                self.metrics.counter("service.verdicts.continue").inc()
                 rep.decision = Decision.CONTINUE
                 nxt = b._next_rung(bracket_id, rep.phase + 1)
                 if nxt is not None:

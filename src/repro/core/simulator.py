@@ -384,3 +384,14 @@ def simulate_hyperband(workload: Workload, configs: Sequence[dict],
     res = _finish("hyperband", timeline, n_nodes, cfg_offset,
                   max(len(b.n) for b in brackets))
     return res
+
+
+# ---------------------------------------------------------------------------
+# trace replay against the REAL scheduler stack
+# ---------------------------------------------------------------------------
+# The simulators above reimplement each policy's scheduling to draw the
+# paper's figures. ``telemetry.trace`` drives synthetic host traces through
+# the real OptimizationService + RungBarrier instead (same workload duck
+# type), re-exported here so simulator users find both layers in one place.
+from repro.telemetry.trace import (HostSpec, TraceResult,  # noqa: E402,F401
+                                   replay_trace, synthetic_trace)

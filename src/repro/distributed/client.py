@@ -83,8 +83,8 @@ class ServiceClient:
 
     def report(self, trial_id: int, phase: int, metric: float,
                t_start: float = 0.0, t_end: float = 0.0,
-               node: Optional[int] = None, demote: bool = False
-               ) -> ReportReply:
+               node: Optional[int] = None, demote: bool = False,
+               env_steps: Optional[int] = None) -> ReportReply:
         """The server's decision: ``"continue"``, ``"stop"``, or — bracket
         mode — ``"parked"`` (the report is withheld at the rung barrier;
         keep the trial's state and poll by re-sending the identical
@@ -94,10 +94,17 @@ class ServiceClient:
         resp = self._call(proto.ReportRequest(
             trial_id=trial_id, phase=phase, metric=float(metric),
             t_start=t_start, t_end=t_end, node=node,
-            demote=True if demote else None))
+            demote=True if demote else None,
+            env_steps=int(env_steps) if env_steps is not None else None))
         return ReportReply(resp.decision,
                            clone_from=getattr(resp, "clone_from", None),
                            perturb=getattr(resp, "perturb", None))
+
+    def stats(self) -> dict:
+        """The server's live telemetry snapshot (the optional ``stats``
+        verb): the metrics-registry snapshot plus ``live_leases``. Raises
+        ``ServiceError`` against a server that predates the verb."""
+        return self._call(proto.StatsRequest()).stats
 
     def heartbeat(self, trial_id: int) -> bool:
         return self._call(proto.HeartbeatRequest(trial_id=trial_id)).ok

@@ -13,6 +13,7 @@ from __future__ import annotations
 import json
 import os
 import threading
+import time
 from typing import Iterator, List, Optional
 
 from repro.core.service import OptimizationService, TrialStatus
@@ -32,6 +33,13 @@ class Journal:
         self._f = open(path, "a", encoding="utf-8")
 
     def append(self, event: dict) -> None:
+        # wall-clock stamp on every event: the injected service clock `t`
+        # is monotonic (meaningless across restarts/hosts), `ts` is epoch
+        # seconds — what the dashboard plots against. Added only when the
+        # caller did not set one; replay treats it as optional, so journals
+        # that predate the field still replay identically.
+        if "ts" not in event:
+            event = dict(event, ts=round(time.time(), 6))
         line = json.dumps(event, sort_keys=True, default=json_default)
         with self._lock:
             self._f.write(line + "\n")

@@ -65,7 +65,12 @@ class ReportRequest:
     # field ignores it (the trial merely survives the rung — degraded, not
     # broken).
     demote: Optional[bool] = None
-    OMIT_IF_NONE = ("demote",)
+    # telemetry: env transitions the reported phase consumed. Never affects
+    # the verdict; surfaces as the ``env_steps`` journal field and the
+    # `service.env_steps` counter. Omitted when None (scalar workers), so
+    # classic frames stay byte-identical and old servers ignore it.
+    env_steps: Optional[int] = None
+    OMIT_IF_NONE = ("demote", "env_steps")
 
 
 @message("heartbeat")
@@ -86,6 +91,16 @@ class SummaryRequest:
 
 @message("shutdown")
 class ShutdownRequest:
+    pass
+
+
+@message("stats")
+class StatsRequest:
+    """Optional telemetry verb: ask the server for a metrics snapshot.
+    Purely additive — old clients never send it, an old server drops the
+    connection on the unknown type (evolution rule 4; tooling-only, so
+    that is acceptable), and nothing in the search protocol depends on
+    it."""
     pass
 
 
@@ -148,6 +163,13 @@ class SummaryResponse:
 @message("shutdown_ok")
 class ShutdownResponse:
     ok: bool = True
+
+
+@message("stats_ok")
+class StatsResponse:
+    # ``telemetry.MetricsRegistry.snapshot()`` plus server-side extras
+    # (live_leases) — see docs/telemetry.md for the metric vocabulary
+    stats: Dict[str, Any]
 
 
 @message("error")

@@ -38,6 +38,10 @@ class MetaoptServer:
                 entrant_patience=max(2.0 * lease_ttl, 10.0))
         self.journal = journal
         self.clock = clock
+        # one registry for the whole process: the server's wire metrics
+        # land next to the service's verdict metrics, so one STATS verb
+        # (or one snapshot) covers both
+        self.metrics = service.metrics
         self._leases: Dict[int, float] = {}          # trial_id -> expiry
         self._lease_lock = threading.Lock()
         # (trial_id, node, phase, t_start, t_end, metric) per report, so the
@@ -103,6 +107,8 @@ class MetaoptServer:
                 return
             with self._conns_lock:
                 self._conns.add(conn)
+            self.metrics.counter("server.connections.opened").inc()
+            self.metrics.gauge("server.connections.open").add(1)
             t = threading.Thread(target=self._handle, args=(conn,),
                                  daemon=True)
             t.start()
@@ -113,10 +119,15 @@ class MetaoptServer:
                 msg = proto.recv_message(conn)
                 if msg is None:
                     break
+                t0 = time.perf_counter()
                 try:
                     resp = self._dispatch(msg)
                 except Exception as e:  # noqa: BLE001 — fault isolation
                     resp = proto.ErrorResponse(f"{type(e).__name__}: {e}")
+                self.metrics.histogram("server.rpc_s." + msg.TYPE).observe(
+                    time.perf_counter() - t0)
+                if isinstance(resp, proto.ErrorResponse):
+                    self.metrics.counter("server.errors").inc()
                 proto.send_message(conn, resp)
                 if isinstance(msg, proto.ShutdownRequest):
                     threading.Thread(target=self.stop, daemon=True).start()
@@ -130,6 +141,8 @@ class MetaoptServer:
                 pass
             with self._conns_lock:
                 self._conns.discard(conn)
+            self.metrics.counter("server.connections.closed").inc()
+            self.metrics.gauge("server.connections.open").add(-1)
 
     # -- verbs --------------------------------------------------------------
     def _dispatch(self, msg):
@@ -161,6 +174,12 @@ class MetaoptServer:
             s["alpha"] = round(self.service.db.completion_rate(
                 self.service.policy.n_phases), 4)
             return proto.SummaryResponse(summary=s)
+        if isinstance(msg, proto.StatsRequest):
+            # live telemetry snapshot (service + server metrics share one
+            # registry) plus the one value only the server knows
+            snap = self.metrics.snapshot()
+            snap["live_leases"] = self.live_lease_count()
+            return proto.StatsResponse(stats=snap)
         if isinstance(msg, proto.ShutdownRequest):
             return proto.ShutdownResponse()
         raise proto.ProtocolError(f"unexpected message {msg.TYPE!r}")
@@ -215,10 +234,18 @@ class MetaoptServer:
             if rec.status is TrialStatus.CRASHED:
                 return proto.ReportResponse(decision="stop")
             n_before = rec.phases_completed
+            b = self.service.barrier
+            was_parked = b is not None and b.is_parked(msg.trial_id)
             verdict = self.service.report_verdict(
                 msg.trial_id, msg.phase, msg.metric, t_start=msg.t_start,
-                t_end=msg.t_end, node=msg.node)
+                t_end=msg.t_end, node=msg.node,
+                env_steps=getattr(msg, "env_steps", None))
             decision = verdict.decision
+            # the FIRST park of a rung-phase report is journaled (polls are
+            # not): the dashboard derives cohort occupancy and park-to-
+            # resolution waits from it. Replay skips unknown event kinds,
+            # so old servers/journals are unaffected.
+            parked_now = (decision is Decision.PARKED and not was_parked)
             if getattr(msg, "demote", None):
                 # client-side rung demotion (pre-barrier population
                 # engines): metric recorded above, trial killed here
@@ -243,10 +270,15 @@ class MetaoptServer:
                         and rec.phases_completed > n_before)
             report_t = rec.reports[-1][1] if recorded else None
             resolved = self.service.drain_resolved()
+        if parked_now:
+            self._journal({"ev": "park", "trial_id": msg.trial_id,
+                           "phase": msg.phase})
         if recorded:
-            self._journal({"ev": "report", "trial_id": msg.trial_id,
-                           "phase": msg.phase, "metric": msg.metric,
-                           "t": report_t})
+            ev = {"ev": "report", "trial_id": msg.trial_id,
+                  "phase": msg.phase, "metric": msg.metric, "t": report_t}
+            if getattr(msg, "env_steps", None) is not None:
+                ev["env_steps"] = msg.env_steps
+            self._journal(ev)
             if verdict.kind is VerdictKind.CLONE:
                 # the trial's live hparams became the perturbed ones: a
                 # replayed journal must rebuild the same configuration
@@ -272,9 +304,12 @@ class MetaoptServer:
         "stop"-releases-lease report), so the verdict can never race the
         reaper; a dead worker's lease simply expires."""
         for rep in resolved:
-            self._journal({"ev": "report", "trial_id": rep.trial_id,
-                           "phase": rep.phase, "metric": rep.metric,
-                           "t": rep.t_recorded})
+            ev = {"ev": "report", "trial_id": rep.trial_id,
+                  "phase": rep.phase, "metric": rep.metric,
+                  "t": rep.t_recorded}
+            if rep.env_steps is not None:
+                ev["env_steps"] = rep.env_steps
+            self._journal(ev)
             if rep.decision is not Decision.CONTINUE:
                 self._journal_status(rep.trial_id)
             node = rep.node
@@ -301,6 +336,7 @@ class MetaoptServer:
         rec = self.service.db.trials.get(trial_id)
         if rec is None or rec.status is not TrialStatus.RUNNING:
             return
+        self.metrics.counter("server.lease_reaps").inc()
         self.service.crash(trial_id)
         self.service.requeue(rec.hparams, rec.bracket_id)
         self._journal_status(trial_id)

@@ -62,6 +62,7 @@ from repro.rl.a3c import a3c_loss, init_loop_state, rollout
 from repro.rl.envs.minigames import make_env
 from repro.rl.ga3c import ga3c_train_config, trial_seed
 from repro.rl.network import A3CNetConfig, apply_net, init_net
+from repro.telemetry.metrics import MetricsRegistry
 
 
 @dataclass(frozen=True)
@@ -98,10 +99,12 @@ class LocalDriver:
         return leases, None
 
     def report(self, trial_id: int, phase: int, metric: float,
-               t_start: float, t_end: float) -> "ReportReply":
+               t_start: float, t_end: float,
+               env_steps: Optional[int] = None) -> "ReportReply":
         from repro.core.scheduler import ReportReply
         verdict = self.service.report_verdict(trial_id, phase, metric,
-                                              t_start=t_start, t_end=t_end)
+                                              t_start=t_start, t_end=t_end,
+                                              env_steps=env_steps)
         return ReportReply(verdict.decision.value,
                            clone_from=verdict.clone_from,
                            perturb=verdict.perturb)
@@ -135,12 +138,13 @@ class RemoteDriver:
                 for t in got], None
 
     def report(self, trial_id: int, phase: int, metric: float,
-               t_start: float, t_end: float) -> str:
+               t_start: float, t_end: float,
+               env_steps: Optional[int] = None) -> str:
         from repro.distributed.client import ServiceError
         try:
             return self.client.report(trial_id, phase, metric,
                                       t_start=t_start, t_end=t_end,
-                                      node=self.node)
+                                      node=self.node, env_steps=env_steps)
         except ServiceError:
             # stale trial (server restarted / lease reaped between our
             # heartbeat and this report): strictly local effect — drop the
@@ -169,10 +173,14 @@ class SlotMeta:
     phase_t0: float = 0.0
     start_sum: float = 0.0
     start_n: float = 0.0
-    # bracket mode: (metric, t_start, t_end) of a rung-phase report the
-    # service answered "parked" — re-sent verbatim as the barrier poll
-    # until the cohort resolves and a continue/stop verdict comes back
-    pending: Optional[Tuple[float, float, float]] = None
+    # bracket mode: (metric, t_start, t_end, env_steps) of a rung-phase
+    # report the service answered "parked" — re-sent verbatim as the
+    # barrier poll until the cohort resolves and a continue/stop verdict
+    # comes back
+    pending: Optional[Tuple[float, float, float, int]] = None
+    # telemetry: wall time (perf_counter) the slot parked, for the
+    # park-stall histogram; None while training
+    parked_at: Optional[float] = None
 
 
 class Bucket:
@@ -200,6 +208,7 @@ class Bucket:
         self._hyper_dev = None          # device mirror, refreshed on change
         self.meta: List[Optional[SlotMeta]] = [None] * capacity
         self.slot_ids = [engine._new_slot_id() for _ in range(capacity)]
+        self._stepped = False           # telemetry: first step = compile
         self._step = _bucket_step(engine.game, t_max, capacity,
                                   engine.n_envs, engine.mesh)
 
@@ -236,6 +245,7 @@ class Bucket:
         self.meta += [None] * pad
         self.slot_ids += [self.engine._new_slot_id() for _ in range(pad)]
         self.capacity = new_capacity
+        self._stepped = False           # new shape: next step compiles again
         self._step = _bucket_step(self.engine.game, self.t_max, new_capacity,
                                   self.engine.n_envs, self.engine.mesh)
 
@@ -404,8 +414,12 @@ class PopulationEngine:
 
     def __init__(self, game: str, *, max_slots: int, n_envs: int = 16,
                  episodes_per_phase: int = 60, max_updates: int = 2000,
-                 seed: int = 0, mesh=None, bracket_eta: Optional[int] = None):
+                 seed: int = 0, mesh=None, bracket_eta: Optional[int] = None,
+                 metrics=None):
         self.game = game
+        # telemetry (engine.* metrics — see telemetry.METRIC_SCHEMA);
+        # pass NULL_REGISTRY for a zero-overhead run (the bench baseline)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.env = make_env(game)
         self.net_cfg = A3CNetConfig(grid=self.env.spec.grid,
                                     n_actions=self.env.spec.n_actions)
@@ -567,6 +581,8 @@ class PopulationEngine:
                                                     rung=self._rung_hint)
                 if self.n_occupied >= self.max_slots:
                     self.speculated += len(leases)
+                    self.metrics.counter(
+                        "engine.speculative_leases").inc(len(leases))
                 if leases:
                     self._admit_grouped(leases, now - t0)
                 elif retry is None:
@@ -593,13 +609,33 @@ class PopulationEngine:
                     break
                 time.sleep(min(max(retry_at - time.monotonic(), 0.01), 0.5))
                 continue
+            iter_t0 = time.perf_counter()
             for bucket in self.buckets.values():
                 if bucket.n_active:
+                    step_t0 = time.perf_counter()
                     bucket.step()
-                    self.total_updates += bucket.n_active
-                    self.total_env_steps += (bucket.n_active * bucket.t_max
+                    if not bucket._stepped:
+                        # first call of this executable shape: dominated by
+                        # trace+compile (dispatch is async, compile is not)
+                        bucket._stepped = True
+                        self.metrics.histogram("engine.compile_s").observe(
+                            time.perf_counter() - step_t0)
+                    stepped = bucket.n_active
+                    self.total_updates += stepped
+                    self.total_env_steps += (stepped * bucket.t_max
                                              * self.n_envs)
+                    self.metrics.counter("engine.updates").inc(stepped)
+                    self.metrics.counter("engine.env_steps").inc(
+                        stepped * bucket.t_max * self.n_envs)
             self._poll_phases(driver, t0)
+            self.metrics.histogram("engine.step_s").observe(
+                time.perf_counter() - iter_t0)
+            self.metrics.gauge("engine.slots_active").set(self.n_active)
+            self.metrics.gauge("engine.slots_occupied").set(self.n_occupied)
+            elapsed = time.monotonic() - t0
+            if elapsed > 0:
+                self.metrics.gauge("engine.env_steps_s").set(
+                    self.total_env_steps / elapsed)
         return self.records
 
     def _poll_phases(self, driver, t0: float) -> None:
@@ -619,13 +655,22 @@ class PopulationEngine:
                     continue
                 score = (float(fin_sum[i]) - meta.start_sum) / max(n, 1.0)
                 t_now = time.monotonic() - t0
+                phase_steps = (meta.updates_in_phase * bucket.t_max
+                               * self.n_envs)
+                phase_s = t_now - meta.phase_t0
+                if phase_s > 0:
+                    self.metrics.histogram(
+                        "engine.phase_env_steps_s").observe(
+                            phase_steps / phase_s)
                 decision = driver.report(meta.trial_id, meta.phase, score,
-                                         meta.phase_t0, t_now)
+                                         meta.phase_t0, t_now,
+                                         env_steps=phase_steps)
                 if decision == "parked":
                     # rung phase: the service withheld the report at the
                     # barrier — mask the slot (state frozen on device) and
                     # keep the exact report for the barrier polls
-                    meta.pending = (score, meta.phase_t0, t_now)
+                    meta.pending = (score, meta.phase_t0, t_now, phase_steps)
+                    meta.parked_at = time.perf_counter()
                     bucket.park(i)
                     continue
                 self.records.append((meta.trial_id, meta.slot_id, meta.phase,
@@ -672,6 +717,7 @@ class PopulationEngine:
             src_bucket, j = src
             bucket.clone_slot(i, src_bucket, j, lr, gamma, beta)
             self.clones += 1
+            self.metrics.counter("engine.clones").inc()
         else:
             bucket.lr[i], bucket.gamma[i], bucket.beta[i] = lr, gamma, beta
             bucket._hyper_dev = None
@@ -701,14 +747,19 @@ class PopulationEngine:
                 meta = bucket.meta[i]
                 if meta is None or bucket.active[i] or meta.pending is None:
                     continue
-                score, ts, te = meta.pending
+                score, ts, te, phase_steps = meta.pending
+                self.metrics.counter("engine.park_polls").inc()
                 decision = driver.report(meta.trial_id, meta.phase, score,
-                                         ts, te)
+                                         ts, te, env_steps=phase_steps)
                 if decision == "parked":
                     continue
                 self.records.append((meta.trial_id, meta.slot_id, meta.phase,
                                      ts, te, score))
                 meta.pending = None
+                if meta.parked_at is not None:
+                    self.metrics.histogram("engine.park_stall_s").observe(
+                        time.perf_counter() - meta.parked_at)
+                    meta.parked_at = None
                 if decision == "stop":
                     bucket.release(i)
                     continue

@@ -1,0 +1,21 @@
+"""Live telemetry for the metaoptimization stack.
+
+Three surfaces over one vocabulary (``METRIC_SCHEMA``):
+
+* ``metrics``   — the in-process registry (counters / gauges / windowed
+  histograms, no external deps) threaded through the service, server, and
+  population-engine hot paths;
+* ``dashboard`` — a journal-tailing CLI (``python -m
+  repro.telemetry.dashboard --journal ... [--follow]``) that reconstructs
+  live per-search rates, cohort occupancy, and best-vs-wall-clock from the
+  JSONL journal alone (no server changes required);
+* ``trace``     — synthetic 1000-host traces driven through the REAL
+  ``core.scheduler`` + ``core.service.RungBarrier``, emitting the same
+  metric schema, so scheduler policies are regression-tested at a scale no
+  CI box can run.
+"""
+from repro.telemetry.metrics import (METRIC_SCHEMA, MetricsRegistry,
+                                     NULL_REGISTRY, NullRegistry)
+
+__all__ = ["METRIC_SCHEMA", "MetricsRegistry", "NULL_REGISTRY",
+           "NullRegistry"]

@@ -1,0 +1,58 @@
+"""Incremental reader for a journal that is still being appended.
+
+``distributed.journal.read_events`` reads a finished journal and skips a
+torn final line (crash mid-write). A *tailer* reads a LIVE journal, so the
+torn-line rule has to become positional: a final line with no trailing
+newline is not torn garbage — it is a write in progress. The tailer
+therefore only ever consumes up to the last newline it can see; the
+partial tail is left un-consumed and picked up whole on a later poll, once
+the writer finishes it. A COMPLETE line that still fails to decode (a
+crash exactly at the newline of a half-written record, or corruption) is
+skipped and counted, same as replay.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+
+class JournalTailer:
+    """Byte-offset tailer over an append-only JSONL file. Each ``poll()``
+    returns the events completed since the previous poll (possibly none).
+    Safe against a concurrently appending writer: frames are only consumed
+    at newline boundaries, so a torn in-flight line is never half-read."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.offset = 0          # bytes consumed (always at a \n boundary)
+        self.skipped = 0         # complete-but-undecodable lines dropped
+
+    def poll(self) -> List[dict]:
+        try:
+            size = os.path.getsize(self.path)
+        except OSError:
+            return []            # not created yet (server still starting)
+        if size < self.offset:
+            # the file shrank: a fresh (non-resume) run truncated/replaced
+            # the journal — start over rather than read garbage offsets
+            self.offset = 0
+        if size == self.offset:
+            return []
+        with open(self.path, "rb") as f:
+            f.seek(self.offset)
+            data = f.read()
+        end = data.rfind(b"\n")
+        if end < 0:
+            return []            # only a torn line so far — wait for it
+        chunk, self.offset = data[:end + 1], self.offset + end + 1
+        events = []
+        for line in chunk.split(b"\n"):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                events.append(json.loads(line.decode("utf-8")))
+            except (UnicodeDecodeError, json.JSONDecodeError):
+                self.skipped += 1
+        return events

@@ -32,6 +32,19 @@ def test_protocol_doc_covers_every_field():
     assert not missing, f"docs/protocol.md lacks fields {missing}"
 
 
+def test_telemetry_doc_covers_every_metric_name():
+    """docs/telemetry.md is the metric vocabulary's spec: every name in
+    METRIC_SCHEMA must appear backticked there, so a metric added to the
+    schema without a doc update fails here (same rule as the protocol)."""
+    from repro.telemetry import METRIC_SCHEMA
+    doc = open(os.path.join(REPO, "docs", "telemetry.md"),
+               encoding="utf-8").read()
+    missing = [n for n in METRIC_SCHEMA if f"`{n}`" not in doc]
+    assert not missing, (
+        f"docs/telemetry.md lacks metric names {missing}: every entry in "
+        "telemetry.METRIC_SCHEMA needs a row in the vocabulary tables")
+
+
 def test_markdown_links_resolve():
     proc = subprocess.run(
         [sys.executable, os.path.join(REPO, "tools", "check_links.py"),

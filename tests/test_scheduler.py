@@ -357,7 +357,7 @@ def test_engine_speculative_refill_overlaps_barrier_wait():
                 self.granted += 1
             return leases, None
 
-        def report(self, tid, phase, metric, ts, te):
+        def report(self, tid, phase, metric, ts, te, env_steps=None):
             if phase == 0 and tid < 3:
                 self.parked.add(tid)
                 if self.speculative_acquires:    # entrant already granted

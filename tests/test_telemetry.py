@@ -1,0 +1,378 @@
+"""Live telemetry: metrics registry semantics, the STATS wire verb (and
+old-client compatibility), concurrent journal tailing, the journal-driven
+dashboard, and 1000-host trace replay against the real Scheduler."""
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core.hypertrick import HyperTrick, RandomSearchPolicy
+from repro.core.search_space import LogUniform, SearchSpace, Uniform
+from repro.core.service import Decision, OptimizationService, TrialStatus
+from repro.core.simulator import (ToyWorkload, replay_trace,
+                                  synthetic_trace)
+from repro.distributed import protocol as proto
+from repro.distributed.client import ServiceClient
+from repro.distributed.journal import Journal, read_events
+from repro.distributed.server import MetaoptServer
+from repro.telemetry import METRIC_SCHEMA, NULL_REGISTRY, MetricsRegistry
+from repro.telemetry.dashboard import SearchView
+from repro.telemetry.dashboard import main as dashboard_main
+from repro.telemetry.tailer import JournalTailer
+
+
+def _space():
+    return SearchSpace({"x": LogUniform(0.01, 100.0)})
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+def test_registry_counter_gauge_histogram_snapshot():
+    reg = MetricsRegistry()
+    reg.counter("a.events").inc()
+    reg.counter("a.events").inc(4)
+    reg.gauge("a.level").set(2.5)
+    reg.gauge("a.level").add(0.5)
+    for v in range(100):
+        reg.histogram("a.lat_s").observe(v / 100.0)
+    snap = reg.snapshot()
+    assert snap["counters"]["a.events"] == 5
+    assert snap["gauges"]["a.level"] == pytest.approx(3.0)
+    h = snap["histograms"]["a.lat_s"]
+    assert h["count"] == 100
+    assert h["p50"] == pytest.approx(0.5)
+    assert h["p99"] == pytest.approx(0.99)
+    assert h["max"] == pytest.approx(0.99)
+    # the whole snapshot is one JSON document (the stats verb payload)
+    json.dumps(snap)
+
+
+def test_registry_histogram_window_bounds_percentiles_not_count():
+    reg = MetricsRegistry()
+    h = reg.histogram("w", window=8)
+    for v in range(100):
+        h.observe(float(v))
+    snap = h.snapshot()
+    assert snap["count"] == 100            # cumulative survives the window
+    assert snap["total"] == pytest.approx(sum(range(100)))
+    assert snap["p50"] >= 92.0             # percentiles are window-local
+
+
+def test_registry_is_get_or_create_and_thread_safe():
+    reg = MetricsRegistry()
+    c = reg.counter("hits")
+    threads = [threading.Thread(
+        target=lambda: [c.inc() for _ in range(1000)]) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert reg.counter("hits") is c
+    assert c.value == 8000
+
+
+def test_null_registry_is_a_noop_with_the_same_surface():
+    NULL_REGISTRY.counter("x").inc()
+    NULL_REGISTRY.gauge("y").set(5.0)
+    NULL_REGISTRY.histogram("z").observe(1.0)
+    snap = NULL_REGISTRY.snapshot()
+    assert snap["counters"] == {} and snap["histograms"] == {}
+
+
+# ---------------------------------------------------------------------------
+# journal: wall-clock ts + tailer vs a concurrent writer
+# ---------------------------------------------------------------------------
+def test_journal_append_injects_wall_clock_ts(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    before = time.time()
+    with Journal(path) as j:
+        j.append({"ev": "report", "trial_id": 1, "metric": 0.5})
+        j.append({"ev": "park", "trial_id": 1, "ts": 123.456})
+    events = list(read_events(path))
+    assert before <= events[0]["ts"] <= time.time()
+    assert events[1]["ts"] == 123.456      # explicit ts (trace replay) wins
+
+
+def test_tailer_leaves_torn_line_then_picks_it_up_whole(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    tailer = JournalTailer(path)
+    assert tailer.poll() == []             # file does not exist yet
+    with open(path, "w") as f:
+        f.write('{"ev": "acquire", "trial_id": 0}\n{"ev": "rep')
+        f.flush()
+        # only the complete line is consumed; the in-flight one is NOT
+        # treated as torn garbage — it is a write in progress
+        assert tailer.poll() == [{"ev": "acquire", "trial_id": 0}]
+        assert tailer.poll() == []
+        assert tailer.skipped == 0
+        f.write('ort", "trial_id": 0}\n')
+        f.flush()
+        assert tailer.poll() == [{"ev": "report", "trial_id": 0}]
+
+
+def test_tailer_skips_complete_undecodable_line(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with open(path, "w") as f:
+        f.write('{"ev": "a"}\nnot json\n{"ev": "b"}\n')
+    tailer = JournalTailer(path)
+    assert tailer.poll() == [{"ev": "a"}, {"ev": "b"}]
+    assert tailer.skipped == 1
+
+
+def test_tailer_resets_when_journal_is_replaced(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    with open(path, "w") as f:
+        f.write('{"ev": "a"}\n{"ev": "b"}\n')
+    tailer = JournalTailer(path)
+    assert len(tailer.poll()) == 2
+    with open(path, "w") as f:             # fresh run truncated the journal
+        f.write('{"ev": "c"}\n')
+    assert tailer.poll() == [{"ev": "c"}]
+
+
+def test_tailer_against_concurrently_appending_writer(tmp_path):
+    """A writer thread appends events in deliberately torn chunks while the
+    tailer polls: every event must come through exactly once, in order,
+    with nothing skipped."""
+    path = str(tmp_path / "j.jsonl")
+    n_events = 300
+    stop = threading.Event()
+
+    def write_all():
+        with open(path, "wb", buffering=0) as f:
+            for i in range(n_events):
+                line = json.dumps({"ev": "report", "i": i}).encode() + b"\n"
+                # tear most lines in two to force the tailer to wait
+                cut = max(1, len(line) // 2) if i % 3 else len(line)
+                f.write(line[:cut])
+                if cut < len(line):
+                    time.sleep(0.0005)
+                    f.write(line[cut:])
+        stop.set()
+
+    t = threading.Thread(target=write_all)
+    t.start()
+    got = []
+    tail = JournalTailer(path)
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline:
+        got.extend(tail.poll())
+        if stop.is_set() and len(got) >= n_events:
+            break
+        time.sleep(0.001)
+    t.join()
+    got.extend(tail.poll())                # final drain
+    assert [e["i"] for e in got] == list(range(n_events))
+    assert tail.skipped == 0
+
+
+# ---------------------------------------------------------------------------
+# service + server instrumentation and the STATS verb
+# ---------------------------------------------------------------------------
+def test_service_counts_verdicts_and_latencies():
+    policy = HyperTrick(_space(), w0=8, n_phases=3, eviction_rate=0.5,
+                        seed=0)
+    svc = OptimizationService(policy)
+    active = {}
+    for _ in range(8):
+        rec = svc.acquire_trial(node=0)
+        active[rec.trial_id] = 0
+    clock = 0.0
+    while active:
+        for tid in list(active):
+            clock += 1.0
+            dec = svc.report(tid, active[tid], -1.0 / (tid + 1),
+                             clock - 1.0, clock, env_steps=100)
+            if dec is Decision.STOP:
+                del active[tid]
+            else:
+                active[tid] += 1
+    snap = svc.metrics.snapshot()
+    c = snap["counters"]
+    assert c["service.env_steps"] == 100 * snap[
+        "histograms"]["service.report_s"]["count"]
+    assert c["service.verdicts.stop"] >= 1          # evictions happened
+    assert c["service.verdicts.continue"] >= 1
+    assert snap["histograms"]["service.acquire_s"]["count"] == 8
+    assert snap["histograms"]["service.report_s"]["count"] >= 8
+
+
+def test_stats_verb_round_trip_over_the_wire():
+    from repro.distributed.worker import make_synthetic_objective
+    from tests.test_distributed import _run_agents
+    policy = HyperTrick(_space(), w0=6, n_phases=3, eviction_rate=0.3,
+                        seed=0)
+    svc = OptimizationService(policy)
+    with MetaoptServer(svc, lease_ttl=10.0) as server:
+        _run_agents(server, 2, make_synthetic_objective(sleep=0.001, seed=1))
+        with ServiceClient(server.host, server.port) as c:
+            c.stats()          # the verb's own timing lands post-snapshot
+            stats = c.stats()  # so the second call sees the first
+    assert stats["live_leases"] == 0
+    assert stats["counters"]["server.connections.opened"] >= 3
+    # old-style agents never sent env_steps, so the counter was never born
+    assert stats["counters"].get("service.env_steps", 0) == 0
+    rpc = {k: v for k, v in stats["histograms"].items()
+           if k.startswith("server.rpc_s.")}
+    assert rpc["server.rpc_s.report"]["count"] >= 6
+    assert rpc["server.rpc_s.acquire"]["count"] >= 6
+    assert "server.rpc_s.stats" in rpc               # this very request
+    verdicts = sum(v for k, v in stats["counters"].items()
+                   if k.startswith("service.verdicts."))
+    assert verdicts >= rpc["server.rpc_s.report"]["count"]
+
+
+def test_old_client_frames_still_decode_and_serve():
+    """A pre-telemetry client omits env_steps on report and never sends
+    stats: both directions must be byte-compatible."""
+    # encode side: env_steps=None is omitted from the wire entirely
+    frame = proto.encode(proto.ReportRequest(1, 0, 0.5, 0.0, 1.0, node=0))
+    assert b"env_steps" not in frame
+    # decode side: an old frame with no env_steps key parses to None
+    old = json.dumps({"type": "report", "trial_id": 1, "phase": 0,
+                      "metric": 0.5, "t_start": 0.0, "t_end": 1.0,
+                      "node": 0}).encode()
+    msg = proto.decode(old)
+    assert msg.env_steps is None
+    # and an old client that never heard of `stats` is untouched: the verb
+    # is strictly opt-in, nothing else in the protocol changed shape
+    svc = OptimizationService(RandomSearchPolicy(_space(), 1, 1, seed=0))
+    with MetaoptServer(svc, lease_ttl=10.0) as server:
+        with ServiceClient(server.host, server.port) as c:
+            trial = c.acquire(node=0)
+            c.report(trial.trial_id, 0, 0.5, 0.0, 1.0)  # no env_steps kwarg
+    assert svc.db.trials[trial.trial_id].status in (TrialStatus.COMPLETED,
+                                                    TrialStatus.KILLED)
+    assert svc.metrics.snapshot()["counters"].get(
+        "service.env_steps", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# trace replay against the real Scheduler/RungBarrier
+# ---------------------------------------------------------------------------
+def test_trace_replay_small_with_host_deaths():
+    policy = HyperTrick(SearchSpace({"x": Uniform(0.0, 1.0)}),
+                        w0=24, n_phases=3, eviction_rate=0.3, seed=0)
+    hosts = synthetic_trace(8, seed=1, fail_frac=0.5, fail_horizon=4.0)
+    res = replay_trace(policy, ToyWorkload(seed=0), hosts,
+                       lease_ttl=3.0, seed=0)
+    assert res.n_hosts == 8 and res.n_trials >= 24  # requeues mint extras
+    # dead hosts' leases were reaped and their configs re-issued
+    assert res.metrics["counters"]["server.lease_reaps"] > 0
+    assert res.service.db.trials  # every trial reached a terminal state
+    for t in res.service.db.trials.values():
+        assert t.status is not TrialStatus.RUNNING
+
+
+def test_trace_replay_1000_hosts_drives_real_rung_barrier():
+    """The acceptance trace: 1000 synthetic hosts (2% failing) drive the
+    REAL OptimizationService + RungBarrier through a full eta=3 bracket,
+    and the emitted metrics carry the same schema as a live server."""
+    policy = HyperTrick(SearchSpace({"x": Uniform(0.0, 1.0)}),
+                        w0=1000, n_phases=5, eviction_rate=0.3, seed=0)
+    hosts = synthetic_trace(1000, seed=7, fail_frac=0.02,
+                            fail_horizon=20.0)
+    res = replay_trace(policy, ToyWorkload(seed=0), hosts,
+                       bracket_eta=3, lease_ttl=10.0, seed=0)
+    assert res.n_hosts == 1000
+    assert res.n_trials >= 1000            # requeues can mint successors
+    assert res.makespan > 0 and 0 < res.occupancy <= 1.0
+    # the real barrier pooled the (nearly) full first rung — hosts that
+    # died before entering shrink the entry cohort — and demoted cohorts
+    assert res.rung_log and res.rung_log[0]["n"] >= 990
+    assert sum(len(r["demoted"]) for r in res.rung_log) > 0
+    c, h = res.metrics["counters"], res.metrics["histograms"]
+    assert c["server.lease_reaps"] > 0     # the 2% of hosts that died
+    assert c["service.requeues"] == c["server.lease_reaps"]
+    assert c["service.verdicts.park"] > 0
+    assert c["service.verdicts.demote"] > 0
+    assert c["service.verdicts.stop"] > 0
+    assert c["service.env_steps"] > 0
+    assert h["service.cohort_wait_s"]["count"] > 0
+    assert h["service.cohort_wait_s"]["p99"] >= h[
+        "service.cohort_wait_s"]["p50"] > 0
+    # nothing left running, and the winners actually finished
+    statuses = {}
+    for t in res.service.db.trials.values():
+        assert t.status is not TrialStatus.RUNNING
+        statuses[t.status.value] = statuses.get(t.status.value, 0) + 1
+    assert statuses.get("completed", 0) > 0
+    assert statuses.get("crashed", 0) > 0  # the dead hosts' trials
+
+
+def test_trace_metrics_use_only_schema_names():
+    """Everything the trace emits must be in METRIC_SCHEMA — the same
+    vocabulary docs/telemetry.md documents and the dashboard reads."""
+    policy = RandomSearchPolicy(SearchSpace({"x": Uniform(0.0, 1.0)}),
+                                12, 3, seed=0)
+    hosts = synthetic_trace(4, seed=0, fail_frac=0.25, fail_horizon=5.0)
+    res = replay_trace(policy, ToyWorkload(seed=0), hosts, lease_ttl=4.0)
+    names = (list(res.metrics["counters"]) + list(res.metrics["gauges"])
+             + list(res.metrics["histograms"]))
+    for name in names:
+        if name.startswith("server.rpc_s."):
+            name = "server.rpc_s.<verb>"
+        assert name in METRIC_SCHEMA, name
+
+
+# ---------------------------------------------------------------------------
+# dashboard (journal -> SearchView -> rendered panel)
+# ---------------------------------------------------------------------------
+def _trace_journal(tmp_path):
+    path = str(tmp_path / "trace_journal.jsonl")
+    policy = HyperTrick(SearchSpace({"x": Uniform(0.0, 1.0)}),
+                        w0=30, n_phases=4, eviction_rate=0.3, seed=0)
+    hosts = synthetic_trace(10, seed=2, fail_frac=0.2, fail_horizon=8.0)
+    with Journal(path) as j:
+        res = replay_trace(policy, ToyWorkload(seed=0), hosts,
+                           bracket_eta=3, lease_ttl=5.0, seed=0, journal=j)
+    return path, res
+
+
+def test_dashboard_view_reconstructs_search_from_journal(tmp_path):
+    path, res = _trace_journal(tmp_path)
+    tail = JournalTailer(path)
+    view = SearchView(window_s=30.0)
+    view.apply_all(tail.poll())
+    assert tail.skipped == 0
+    assert len(view.trials) == res.n_trials
+    assert view.best == pytest.approx(res.best_metric)
+    assert view.reaps == res.metrics["counters"]["server.lease_reaps"]
+    assert view.parked == {}               # bracket fully resolved
+    assert len(view.cohort_waits) > 0
+    assert view.worker_exits               # dead hosts journaled their exit
+    _, rps, eps = view._window_rates()
+    assert rps > 0 and eps > 0
+    panel = view.render(path)
+    for needle in ("best score:", "reports/s", "env-steps/s", "cohorts:",
+                   "wait p50", "reaps", "workers:"):
+        assert needle in panel, needle
+
+
+def test_dashboard_cli_once(tmp_path, capsys):
+    path, _ = _trace_journal(tmp_path)
+    assert dashboard_main(["--journal", path, "--once"]) == 0
+    out = capsys.readouterr().out
+    assert "best score:" in out and "reports/s" in out
+
+
+# ---------------------------------------------------------------------------
+# worker_exit journaling (OS-process cluster end to end)
+# ---------------------------------------------------------------------------
+def test_process_cluster_journals_worker_exit(tmp_path):
+    from repro.core.executor import ProcessCluster
+    path = str(tmp_path / "j.jsonl")
+    policy = RandomSearchPolicy(_space(), 4, 2, seed=0)
+    cluster = ProcessCluster(2, {"kind": "synthetic", "sleep": 0.01},
+                             lease_ttl=10.0, heartbeat_interval=0.2,
+                             journal_path=path)
+    res = cluster.run(policy)
+    assert res.summary()["n_trials"] == 4
+    exits = [e for e in list(read_events(path))
+             if e.get("ev") == "worker_exit"]
+    assert sorted(e["node"] for e in exits) == [0, 1]
+    assert all(e["exit_code"] == 0 for e in exits)
+    assert all("ts" in e for e in exits)   # every journal event is stamped
