@@ -36,6 +36,7 @@ def _suites(fast: bool):
         from benchmarks import population_benches as pb
         from benchmarks import sharded_benches as shb
         from benchmarks import telemetry_benches as tb
+        from benchmarks import trace_benches as trb
         suites += [
             ("ga3c_throughput", sb.bench_ga3c_throughput),
             ("lm_train_step", sb.bench_lm_train_step),
@@ -46,6 +47,7 @@ def _suites(fast: bool):
             ("population_multihost", mhb.bench_population_multihost),
             ("population_pbt", pbt.bench_population_pbt),  # clone cost
             ("telemetry_overhead", tb.bench_telemetry_overhead),
+            ("trace_overhead", trb.bench_trace_overhead),
         ]
     return suites
 

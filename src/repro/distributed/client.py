@@ -33,10 +33,24 @@ class Pending:
 
 
 class ServiceClient:
-    def __init__(self, host: str, port: int, timeout: float = 60.0):
+    def __init__(self, host: str, port: int, timeout: float = 60.0,
+                 trace_ctx: Optional[str] = None):
         self._sock = socket.create_connection((host, port), timeout=timeout)
         self._sock.settimeout(timeout)
         self._lock = threading.Lock()
+        # distributed tracing (opt-in): when set, acquire/report frames
+        # carry {"ctx": trace_ctx, "t": <caller clock>} so the server can
+        # stitch this worker's spans onto its own clock. None (the
+        # default) keeps every frame byte-identical to an untraced client.
+        self.trace_ctx = trace_ctx
+
+    def _trace(self, t: Optional[float]) -> Optional[Dict[str, Any]]:
+        if self.trace_ctx is None:
+            return None
+        tr: Dict[str, Any] = {"ctx": self.trace_ctx}
+        if t is not None:
+            tr["t"] = round(float(t), 6)
+        return tr
 
     def _call(self, msg):
         with self._lock:
@@ -50,12 +64,16 @@ class ServiceClient:
 
     # -- verbs --------------------------------------------------------------
     def acquire(self, node: Optional[int] = None,
-                rung: Optional[int] = None):
+                rung: Optional[int] = None,
+                trace_t: Optional[float] = None):
         """A RemoteTrial, a Pending marker (retry later), or None (done).
         ``rung`` is the bracket hint: granted trials enroll in the
         server-side rung barrier at grant time (pass 0 when refilling
-        bracket capacity; omit for plain searches)."""
-        resp = self._call(proto.AcquireRequest(node=node, rung=rung))
+        bracket capacity; omit for plain searches). ``trace_t`` is the
+        caller's clock at send (the t_start/t_end timebase) when the
+        client traces."""
+        resp = self._call(proto.AcquireRequest(node=node, rung=rung,
+                                               trace=self._trace(trace_t)))
         if resp.trial_id is None:
             if resp.retry_after is not None:
                 return Pending(resp.retry_after)
@@ -63,14 +81,16 @@ class ServiceClient:
         return RemoteTrial(resp.trial_id, resp.hparams, resp.n_phases)
 
     def acquire_batch(self, node: Optional[int] = None, slots: int = 1,
-                      rung: Optional[int] = None):
+                      rung: Optional[int] = None,
+                      trace_t: Optional[float] = None):
         """Lease up to ``slots`` trials in one round-trip (population
         workers). A list of RemoteTrials (possibly fewer than ``slots``),
         a Pending marker, or None (budget spent for good). ``rung`` as in
         :meth:`acquire`."""
         resp = self._call(proto.AcquireRequest(node=node,
                                                slots=max(1, slots),
-                                               rung=rung))
+                                               rung=rung,
+                                               trace=self._trace(trace_t)))
         if resp.trial_id is None:
             if resp.retry_after is not None:
                 return Pending(resp.retry_after)
@@ -84,7 +104,8 @@ class ServiceClient:
     def report(self, trial_id: int, phase: int, metric: float,
                t_start: float = 0.0, t_end: float = 0.0,
                node: Optional[int] = None, demote: bool = False,
-               env_steps: Optional[int] = None) -> ReportReply:
+               env_steps: Optional[int] = None,
+               trace_t: Optional[float] = None) -> ReportReply:
         """The server's decision: ``"continue"``, ``"stop"``, or — bracket
         mode — ``"parked"`` (the report is withheld at the rung barrier;
         keep the trial's state and poll by re-sending the identical
@@ -95,7 +116,8 @@ class ServiceClient:
             trial_id=trial_id, phase=phase, metric=float(metric),
             t_start=t_start, t_end=t_end, node=node,
             demote=True if demote else None,
-            env_steps=int(env_steps) if env_steps is not None else None))
+            env_steps=int(env_steps) if env_steps is not None else None,
+            trace=self._trace(trace_t)))
         return ReportReply(resp.decision,
                            clone_from=getattr(resp, "clone_from", None),
                            perturb=getattr(resp, "perturb", None))

@@ -48,7 +48,14 @@ class AcquireRequest:
     # capacity before any park. Omitted when None: hint-less trials never
     # park (plain search, or a bracket-unaware worker sharing the server).
     rung: Optional[int] = None
-    OMIT_IF_NONE = ("rung",)
+    # distributed tracing (opt-in): {"ctx": <worker trace id>, "t": <the
+    # worker's clock at send, same timebase as report t_start/t_end>}.
+    # The server stamps granted trials with ctx (journal/track stitching)
+    # and derives a worker→server clock offset from t. Omitted when the
+    # client doesn't trace, so untraced frames stay byte-identical; an old
+    # server drops the unknown field (evolution rule).
+    trace: Optional[Dict[str, Any]] = None
+    OMIT_IF_NONE = ("rung", "trace")
 
 
 @message("report")
@@ -70,7 +77,13 @@ class ReportRequest:
     # `service.env_steps` counter. Omitted when None (scalar workers), so
     # classic frames stay byte-identical and old servers ignore it.
     env_steps: Optional[int] = None
-    OMIT_IF_NONE = ("demote", "env_steps")
+    # distributed tracing: same shape as acquire.trace. ``t`` lets the
+    # server map this report's worker-clock t_start/t_end onto its own
+    # wall clock (offset = wall_now - t) and emit a stitched `trial.phase`
+    # span. Omitted when the client doesn't trace (byte-identical frame);
+    # old servers ignore it.
+    trace: Optional[Dict[str, Any]] = None
+    OMIT_IF_NONE = ("demote", "env_steps", "trace")
 
 
 @message("heartbeat")

@@ -19,6 +19,12 @@ from repro.core.scheduler import Verdict, VerdictKind
 from repro.core.service import Decision, OptimizationService, TrialStatus
 from repro.distributed import protocol as proto
 from repro.distributed.journal import Journal
+from repro.telemetry.spans import NULL_RECORDER, SpanRecorder
+
+# verbs that get an `rpc.<verb>` span in the journal. Heartbeats are too
+# chatty (one per live trial per interval) and stats/summary/shutdown are
+# tooling — none of them explain where a trial's wall-clock went.
+_SPANNED_VERBS = frozenset(("acquire", "report", "crash"))
 
 
 class MetaoptServer:
@@ -37,6 +43,16 @@ class MetaoptServer:
                 expect_entrants=bracket_capacity,
                 entrant_patience=max(2.0 * lease_ttl, 10.0))
         self.journal = journal
+        # spans land in the same journal as every other event; a
+        # journal-less server records nothing (the null twin)
+        self.spans = (SpanRecorder(journal) if journal is not None
+                      else NULL_RECORDER)
+        # distributed tracing: per-trial worker context — "ctx" (the
+        # worker's trace id, stamped onto journal acquire events) and
+        # "offset" (server wall clock minus the worker's t_start/t_end
+        # clock, refreshed from every traced frame's "t"), so worker-side
+        # phase intervals stitch onto the server's timeline
+        self._trace_ctx: Dict[int, dict] = {}
         self.clock = clock
         # one registry for the whole process: the server's wire metrics
         # land next to the service's verdict metrics, so one STATS verb
@@ -120,12 +136,20 @@ class MetaoptServer:
                 if msg is None:
                     break
                 t0 = time.perf_counter()
+                wall0 = time.time()
                 try:
                     resp = self._dispatch(msg)
                 except Exception as e:  # noqa: BLE001 — fault isolation
                     resp = proto.ErrorResponse(f"{type(e).__name__}: {e}")
+                rpc_s = time.perf_counter() - t0
                 self.metrics.histogram("server.rpc_s." + msg.TYPE).observe(
-                    time.perf_counter() - t0)
+                    rpc_s)
+                if msg.TYPE in _SPANNED_VERBS:
+                    self.spans.record("rpc." + msg.TYPE, wall0, rpc_s,
+                                      cat="rpc",
+                                      trial_id=getattr(msg, "trial_id",
+                                                       None),
+                                      node=getattr(msg, "node", None))
                 if isinstance(resp, proto.ErrorResponse):
                     self.metrics.counter("server.errors").inc()
                 proto.send_message(conn, resp)
@@ -205,11 +229,14 @@ class MetaoptServer:
                 return proto.AcquireResponse(None, None, n_phases,
                                              retry_after=retry)
         for rec in recs:
+            ctx = self._note_trace(rec.trial_id, getattr(msg, "trace", None))
             ev = {"ev": "acquire", "trial_id": rec.trial_id,
                   "hparams": rec.hparams, "node": rec.node,
                   "requeued": rec.requeued, "t": rec.start_time}
             if rec.bracket_id:
                 ev["bracket"] = rec.bracket_id
+            if ctx is not None:
+                ev["ctx"] = ctx
             self._journal(ev)
 
         def batch_entry(r):
@@ -223,10 +250,45 @@ class MetaoptServer:
                                      n_phases, batch=batch,
                                      bracket_id=recs[0].bracket_id or None)
 
+    def _note_trace(self, trial_id: int, tr) -> Optional[str]:
+        """Absorb a frame's trace context; returns the trial's ctx (if
+        any). ``offset`` maps the worker's t_start/t_end clock onto the
+        server's wall clock — refreshed every traced frame, so worker
+        clock drift re-zeros at each report."""
+        entry = self._trace_ctx.get(trial_id)
+        if isinstance(tr, dict):
+            if entry is None:
+                entry = self._trace_ctx[trial_id] = {}
+            ctx = tr.get("ctx")
+            if ctx is not None:
+                entry["ctx"] = str(ctx)
+            t = tr.get("t")
+            if isinstance(t, (int, float)):
+                entry["offset"] = time.time() - float(t)
+        return entry.get("ctx") if entry else None
+
+    def _phase_span(self, trial_id: int, phase: int, t_start: float,
+                    t_end: float, node) -> None:
+        """A stitched `trial.phase` span: the worker-side interval mapped
+        onto the server wall clock via the trial's trace offset. Without a
+        trace context the span is anchored so it *ends now* — exact for a
+        fresh report (sent right after t_end), shifted-but-well-formed for
+        a barrier-resolved one."""
+        dur = t_end - t_start
+        if dur < 0:
+            return
+        entry = self._trace_ctx.get(trial_id, {})
+        offset = entry.get("offset")
+        ts = (offset + t_start) if offset is not None else time.time() - dur
+        self.spans.record("trial.phase", ts, dur, cat="trial",
+                          trial_id=trial_id, phase=phase, node=node,
+                          ctx=entry.get("ctx"))
+
     def _do_report(self, msg: proto.ReportRequest):
         rec = self.service.db.trials.get(msg.trial_id)
         if rec is None:
             return proto.ErrorResponse(f"unknown trial {msg.trial_id}")
+        self._note_trace(msg.trial_id, getattr(msg, "trace", None))
         # atomic with the reaper: a zombie whose lease was reclaimed gets
         # "stop" and its metric is never recorded — the status check, the
         # report, and the lease renewal cannot interleave with _reclaim
@@ -279,6 +341,8 @@ class MetaoptServer:
             if getattr(msg, "env_steps", None) is not None:
                 ev["env_steps"] = msg.env_steps
             self._journal(ev)
+            self._phase_span(msg.trial_id, msg.phase, msg.t_start,
+                             msg.t_end, msg.node)
             if verdict.kind is VerdictKind.CLONE:
                 # the trial's live hparams became the perturbed ones: a
                 # replayed journal must rebuild the same configuration
@@ -310,12 +374,14 @@ class MetaoptServer:
             if rep.env_steps is not None:
                 ev["env_steps"] = rep.env_steps
             self._journal(ev)
-            if rep.decision is not Decision.CONTINUE:
-                self._journal_status(rep.trial_id)
             node = rep.node
             if node is None:
                 trial = self.service.db.trials.get(rep.trial_id)
                 node = trial.node if trial is not None else None
+            self._phase_span(rep.trial_id, rep.phase, rep.t_start,
+                             rep.t_end, node)
+            if rep.decision is not Decision.CONTINUE:
+                self._journal_status(rep.trial_id)
             with self._log_lock:
                 self.report_log.append((rep.trial_id, node, rep.phase,
                                         rep.t_start, rep.t_end, rep.metric))

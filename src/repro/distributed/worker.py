@@ -18,6 +18,7 @@ import math
 import threading
 import time
 import traceback
+import uuid
 from typing import Callable, Optional
 
 import numpy as np
@@ -110,6 +111,18 @@ class WorkerAgent:
         self._lost: set = set()                # trials whose lease was lost
         self._stop = threading.Event()
         self._t0 = time.monotonic()
+        # distributed tracing on by default: acquire/report frames carry
+        # this worker's trace context so a journal-backed server stitches
+        # its phase spans onto the server clock (telemetry.spans). A
+        # caller that set its own ctx on the client wins.
+        if getattr(client, "trace_ctx", None) is None:
+            client.trace_ctx = (f"w{node}-{uuid.uuid4().hex[:6]}"
+                                if node is not None
+                                else f"w-{uuid.uuid4().hex[:6]}")
+
+    def _clock(self) -> float:
+        """The worker clock every t_start/t_end (and trace ``t``) uses."""
+        return time.monotonic() - self._t0
 
     def run(self) -> int:
         """Acquire/run/report until the budget is spent or the server goes
@@ -121,7 +134,8 @@ class WorkerAgent:
             while True:
                 try:
                     trial = self.client.acquire(
-                        self.node, rung=0 if self.bracket else None)
+                        self.node, rung=0 if self.bracket else None,
+                        trace_t=self._clock())
                 except (ServiceError, OSError, RuntimeError):
                     break                       # server gone — we are done
                 if trial is None:
@@ -142,7 +156,7 @@ class WorkerAgent:
         self._active = trial.trial_id
         try:
             for phase in range(trial.n_phases):
-                t_start = time.monotonic() - self._t0
+                t_start = self._clock()
                 try:
                     metric, state = self.objective(trial.hparams, phase,
                                                    state)
@@ -154,14 +168,15 @@ class WorkerAgent:
                     except (ServiceError, OSError, RuntimeError):
                         pass
                     return
-                t_end = time.monotonic() - self._t0
+                t_end = self._clock()
                 if trial.trial_id in self._lost:
                     return                      # lease reclaimed — abandon
                 while True:
                     try:
                         decision = self.client.report(
                             trial.trial_id, phase, metric,
-                            t_start=t_start, t_end=t_end, node=self.node)
+                            t_start=t_start, t_end=t_end, node=self.node,
+                            trace_t=self._clock())
                     except (ServiceError, OSError, RuntimeError):
                         return                  # stale trial or server gone
                     if decision != "parked":

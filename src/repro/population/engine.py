@@ -63,6 +63,7 @@ from repro.rl.envs.minigames import make_env
 from repro.rl.ga3c import ga3c_train_config, trial_seed
 from repro.rl.network import A3CNetConfig, apply_net, init_net
 from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.spans import NULL_RECORDER
 
 
 @dataclass(frozen=True)
@@ -126,10 +127,20 @@ class RemoteDriver:
         self._lost: set = set()
         self._t0 = time.monotonic()
 
+    def set_timebase(self, t0: float) -> None:
+        """Adopt the engine's run clock (``time.monotonic()`` at run
+        start) so the trace ``t`` this driver sends matches the
+        t_start/t_end timebase of the engine's reports exactly."""
+        self._t0 = t0
+
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
     def acquire_many(self, k: int, rung: Optional[int] = None,
                      ) -> Tuple[List[TrialLease], Optional[float]]:
         from repro.distributed.client import Pending
-        got = self.client.acquire_batch(node=self.node, slots=k, rung=rung)
+        got = self.client.acquire_batch(node=self.node, slots=k, rung=rung,
+                                        trace_t=self._now())
         if got is None:
             return [], None
         if isinstance(got, Pending):
@@ -144,7 +155,8 @@ class RemoteDriver:
         try:
             return self.client.report(trial_id, phase, metric,
                                       t_start=t_start, t_end=t_end,
-                                      node=self.node, env_steps=env_steps)
+                                      node=self.node, env_steps=env_steps,
+                                      trace_t=self._now())
         except ServiceError:
             # stale trial (server restarted / lease reaped between our
             # heartbeat and this report): strictly local effect — drop the
@@ -415,11 +427,15 @@ class PopulationEngine:
     def __init__(self, game: str, *, max_slots: int, n_envs: int = 16,
                  episodes_per_phase: int = 60, max_updates: int = 2000,
                  seed: int = 0, mesh=None, bracket_eta: Optional[int] = None,
-                 metrics=None):
+                 metrics=None, spans=None):
         self.game = game
         # telemetry (engine.* metrics — see telemetry.METRIC_SCHEMA);
         # pass NULL_REGISTRY for a zero-overhead run (the bench baseline)
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # distributed tracing (engine.* spans — telemetry.SPAN_SCHEMA):
+        # a SpanRecorder sinking to a journal, or the default no-op twin
+        # (span emission sites are per-phase / per-compile, never per-step)
+        self.spans = spans if spans is not None else NULL_RECORDER
         self.env = make_env(game)
         self.net_cfg = A3CNetConfig(grid=self.env.spec.grid,
                                     n_actions=self.env.spec.n_actions)
@@ -554,6 +570,12 @@ class PopulationEngine:
     # -- the loop -----------------------------------------------------------
     def run(self, driver) -> List[Tuple]:
         t0 = time.monotonic()
+        set_tb = getattr(driver, "set_timebase", None)
+        if set_tb is not None:
+            # remote tracing: the driver's trace `t` must share this run's
+            # t_start/t_end timebase, or the server's clock offset is off
+            # by the construction-to-run gap
+            set_tb(t0)
         exhausted = False
         retry_at = 0.0
         poll_at = 0.0
@@ -618,8 +640,16 @@ class PopulationEngine:
                         # first call of this executable shape: dominated by
                         # trace+compile (dispatch is async, compile is not)
                         bucket._stepped = True
+                        compile_s = time.perf_counter() - step_t0
                         self.metrics.histogram("engine.compile_s").observe(
-                            time.perf_counter() - step_t0)
+                            compile_s)
+                        # the compile serves every trial stacked in the
+                        # bucket — critical_path splits it across them
+                        self.spans.end(
+                            "engine.compile", compile_s, cat="engine",
+                            t_max=bucket.t_max,
+                            trials=[m.trial_id for m in bucket.meta
+                                    if m is not None])
                     stepped = bucket.n_active
                     self.total_updates += stepped
                     self.total_env_steps += (stepped * bucket.t_max
@@ -662,6 +692,9 @@ class PopulationEngine:
                     self.metrics.histogram(
                         "engine.phase_env_steps_s").observe(
                             phase_steps / phase_s)
+                self.spans.end("engine.phase", phase_s, cat="engine",
+                               trial_id=meta.trial_id, phase=meta.phase,
+                               slot=meta.slot_id)
                 decision = driver.report(meta.trial_id, meta.phase, score,
                                          meta.phase_t0, t_now,
                                          env_steps=phase_steps)
@@ -715,9 +748,14 @@ class PopulationEngine:
         src = self._find_slot(reply.clone_from)
         if src is not None and src != (bucket, i):
             src_bucket, j = src
+            clone_t0 = time.perf_counter()
             bucket.clone_slot(i, src_bucket, j, lr, gamma, beta)
             self.clones += 1
             self.metrics.counter("engine.clones").inc()
+            self.spans.end("engine.clone",
+                           time.perf_counter() - clone_t0, cat="engine",
+                           trial_id=meta.trial_id,
+                           clone_from=reply.clone_from)
         else:
             bucket.lr[i], bucket.gamma[i], bucket.beta[i] = lr, gamma, beta
             bucket._hyper_dev = None
@@ -757,8 +795,12 @@ class PopulationEngine:
                                      ts, te, score))
                 meta.pending = None
                 if meta.parked_at is not None:
+                    stall_s = time.perf_counter() - meta.parked_at
                     self.metrics.histogram("engine.park_stall_s").observe(
-                        time.perf_counter() - meta.parked_at)
+                        stall_s)
+                    self.spans.end("engine.park_stall", stall_s,
+                                   cat="engine", trial_id=meta.trial_id,
+                                   phase=meta.phase, slot=meta.slot_id)
                     meta.parked_at = None
                 if decision == "stop":
                     bucket.release(i)

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import threading
+import uuid
 from typing import Optional
 
 from repro.distributed.client import ServiceClient, ServiceError
@@ -31,6 +32,12 @@ class PopulationWorkerAgent:
                  node: Optional[int] = None):
         self.client = client
         self.engine = engine
+        # distributed tracing on by default, as in WorkerAgent: the
+        # engine's phase reports stitch into per-trial server spans
+        if getattr(client, "trace_ctx", None) is None:
+            client.trace_ctx = (f"pop{node}-{uuid.uuid4().hex[:6]}"
+                                if node is not None
+                                else f"pop-{uuid.uuid4().hex[:6]}")
         self.driver = RemoteDriver(client, node=node)
         self.heartbeat_interval = heartbeat_interval
         self._stop = threading.Event()

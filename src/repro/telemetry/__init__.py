@@ -13,9 +13,18 @@ Three surfaces over one vocabulary (``METRIC_SCHEMA``):
   ``core.scheduler`` + ``core.service.RungBarrier``, emitting the same
   metric schema, so scheduler policies are regression-tested at a scale no
   CI box can run.
+
+Plus per-trial distributed tracing over a second vocabulary
+(``SPAN_SCHEMA``): ``spans`` (the recorder + journal event kind, with a
+trace context propagated through the wire protocol), ``export`` (journal →
+Chrome trace-event JSON for Perfetto), and ``critical_path`` (per-trial
+wall-clock attribution into compile / step / rpc / park-wait / idle).
 """
 from repro.telemetry.metrics import (METRIC_SCHEMA, MetricsRegistry,
                                      NULL_REGISTRY, NullRegistry)
+from repro.telemetry.spans import (NULL_RECORDER, SPAN_SCHEMA, Span,
+                                   SpanRecorder, derive_spans)
 
 __all__ = ["METRIC_SCHEMA", "MetricsRegistry", "NULL_REGISTRY",
-           "NullRegistry"]
+           "NullRegistry", "NULL_RECORDER", "SPAN_SCHEMA", "Span",
+           "SpanRecorder", "derive_spans"]

@@ -55,17 +55,27 @@ class SearchView:
     Timestamps: every event appended by this PR carries a wall-clock
     ``ts``; events from older journals fall back to the injected service
     clock ``t`` (monotonic — still consistent *within* one server
-    incarnation, which is all rates need)."""
+    incarnation, which is all rates need). Multi-host journals can carry
+    *regressing* ``ts`` (NTP steps, cross-host clock skew): those are
+    counted (``ts_regressions``, warned about in ``render``) and clamped
+    onto a monotone event clock instead of silently poisoning the rate
+    windows. In ``--follow`` mode the rate window runs on the reader's own
+    ``time.monotonic()`` arrival clock, which no producer skew can move
+    backwards at all."""
 
-    def __init__(self, window_s: float = 30.0):
+    def __init__(self, window_s: float = 30.0,
+                 skew_tolerance_s: float = 0.05):
         self.window_s = window_s
+        # regressions smaller than this are concurrent-writer jitter on
+        # one host (stamp-then-lock in Journal.append), not clock skew
+        self.skew_tolerance_s = skew_tolerance_s
         self.n_events = 0
         self.trials: Dict[int, dict] = {}
         self.by_status: Dict[str, int] = {}
         self.best: Optional[float] = None
         self.best_trial: Optional[int] = None
         self.best_curve: List[Tuple[float, float]] = []   # (t, best)
-        self.reports: deque = deque(maxlen=100_000)       # (t, env_steps)
+        self.reports: deque = deque(maxlen=100_000)  # (t, env_steps, mono)
         self.reaps = 0
         self.clones = 0
         self.parked: Dict[int, Tuple[float, int, int]] = {}  # tid->(t,ph,br)
@@ -74,6 +84,9 @@ class SearchView:
         self.worker_exits: List[Tuple[float, Any, int]] = []
         self.t_first: Optional[float] = None
         self.t_last: Optional[float] = None
+        self.ts_regressions = 0          # events whose ts ran backwards
+        self.max_regression_s = 0.0
+        self._mono_first: Optional[float] = None
 
     # -- event intake -------------------------------------------------------
     def _time(self, ev: dict) -> float:
@@ -83,15 +96,35 @@ class SearchView:
         if ts is None:
             ts = self.t_last if self.t_last is not None else 0.0
         ts = float(ts)
+        if ev.get("ev") == "span":
+            # spans are retrospective: journaled at completion (possibly
+            # long after — a parked phase lands at cohort resolution) but
+            # stamped with their START. They carry history, not stream
+            # time — keep them off the monotone event clock and the skew
+            # counter entirely
+            return ts + float(ev.get("dur") or 0.0)
         if self.t_first is None:
             self.t_first = ts
-        self.t_last = max(self.t_last, ts) if self.t_last is not None else ts
+        if self.t_last is not None:
+            if ts < self.t_last - self.skew_tolerance_s:
+                # wall-clock skew across hosts / an NTP step: count it and
+                # clamp onto the monotone event clock, so rate windows and
+                # wait quantiles never see time run backwards
+                self.ts_regressions += 1
+                self.max_regression_s = max(self.max_regression_s,
+                                            self.t_last - ts)
+            ts = max(ts, self.t_last)
+        self.t_last = ts
         return ts
 
-    def apply(self, ev: dict) -> None:
+    def apply(self, ev: dict, mono: Optional[float] = None) -> None:
+        """Fold one event in. ``mono`` is the reader's ``time.monotonic()``
+        arrival stamp (follow mode); None for post-mortem reads."""
         self.n_events += 1
         kind = ev.get("ev")
         t = self._time(ev)
+        if mono is not None and self._mono_first is None:
+            self._mono_first = mono
         if kind == "acquire":
             tid = ev["trial_id"]
             self.trials[tid] = {"status": "running",
@@ -101,7 +134,7 @@ class SearchView:
                 self.nodes_seen.add(ev["node"])
         elif kind == "report":
             tid = ev["trial_id"]
-            self.reports.append((t, int(ev.get("env_steps") or 0)))
+            self.reports.append((t, int(ev.get("env_steps") or 0), mono))
             parked = self.parked.pop(tid, None)
             if parked is not None:
                 self.cohort_waits.append(max(0.0, t - parked[0]))
@@ -127,27 +160,39 @@ class SearchView:
             self.worker_exits.append((t, ev.get("node"),
                                       int(ev.get("exit_code") or 0)))
 
-    def apply_all(self, events: List[dict]) -> None:
+    def apply_all(self, events: List[dict],
+                  mono: Optional[float] = None) -> None:
         for ev in events:
-            self.apply(ev)
+            self.apply(ev, mono=mono)
 
     # -- derived views ------------------------------------------------------
     def _window_rates(self) -> Tuple[float, float, float]:
         """(window_used_s, reports/s, env-steps/s) over the trailing
-        window, anchored at the newest event (so a finished journal still
-        shows its closing rates)."""
+        window. Follow mode (events carry ``mono`` arrival stamps) windows
+        on the reader's own ``time.monotonic()`` — immune to producer
+        clock steps by construction. Post-mortem reads window on the
+        (monotone-clamped) event clock, anchored at the newest event, so a
+        finished journal still shows its closing rates."""
         if not self.reports or self.t_last is None:
             return self.window_s, 0.0, 0.0
-        cut = self.t_last - self.window_s
+        live = self.reports[-1][2] is not None
+        if live:
+            anchor, key = time.monotonic(), 2
+            first = self._mono_first
+        else:
+            anchor, key = self.t_last, 0
+            first = self.t_first
+        cut = anchor - self.window_s
         n = steps = 0
-        for t, s in reversed(self.reports):
-            if t < cut:
+        for item in reversed(self.reports):
+            k = item[key]
+            if k is None or k < cut:
                 break
             n += 1
-            steps += s
+            steps += item[1]
         span = self.window_s
-        if self.t_first is not None:
-            span = min(span, max(self.t_last - self.t_first, 1e-9))
+        if first is not None:
+            span = min(span, max(anchor - first, 1e-9))
         return span, n / span, steps / span
 
     def status_counts(self) -> Dict[str, int]:
@@ -170,8 +215,13 @@ class SearchView:
                 else None)
         counts = self.status_counts()
         lines = []
-        lines.append(f"journal: {source or '-'}  ({self.n_events} events"
-                     + (f", {skipped} torn/skipped" if skipped else "") + ")")
+        lines.append(f"journal: {source or '-'}  ({self.n_events} events, "
+                     f"{skipped} undecodable skipped)")
+        if self.ts_regressions:
+            lines.append(
+                f"WARNING: {self.ts_regressions} events with regressing "
+                f"ts (max -{self.max_regression_s:.3f}s) — wall-clock "
+                f"skew across hosts? rates use a clamped monotone clock")
         status = ", ".join(f"{k} {v}" for k, v in sorted(counts.items()))
         lines.append(f"trials: {len(self.trials)} acquired | "
                      f"{status or 'none yet'}")
@@ -188,7 +238,7 @@ class SearchView:
         if life is not None:
             lines.append(f"lifetime: {len(self.reports) / life:.2f} "
                          f"reports/s | "
-                         f"{sum(s for _, s in self.reports) / life:.0f} "
+                         f"{sum(r[1] for r in self.reports) / life:.0f} "
                          f"env-steps/s over {life:.1f}s")
         lines.append(f"leases: {self.reaps} reaps (requeues) | "
                      f"clones: {self.clones}")
@@ -227,13 +277,26 @@ def main(argv=None) -> int:
 
     tailer = JournalTailer(args.journal)
     view = SearchView(window_s=args.window)
-    view.apply_all(tailer.poll())
     if not args.follow:
-        print(view.render(args.journal, tailer.skipped))
+        # drain the whole journal (polls are max_bytes-bounded now), keep
+        # the raw events for the critical-path pass
+        events: List[dict] = []
+        while True:
+            batch = tailer.poll()
+            if not batch:
+                break
+            events.extend(batch)
+        view.apply_all(events)
+        out = view.render(args.journal, tailer.skipped)
+        from repro.telemetry.critical_path import critical_path_report
+        table = critical_path_report(events)
+        if table:
+            out += "\n\n" + table
+        print(out)
         return 0
     try:
         while True:
-            view.apply_all(tailer.poll())
+            view.apply_all(tailer.poll(), mono=time.monotonic())
             # clear + home, then one panel — readable on any ANSI terminal
             sys.stdout.write("\x1b[2J\x1b[H")
             sys.stdout.write(view.render(args.journal, tailer.skipped))

@@ -9,12 +9,20 @@ partial tail is left un-consumed and picked up whole on a later poll, once
 the writer finishes it. A COMPLETE line that still fails to decode (a
 crash exactly at the newline of a half-written record, or corruption) is
 skipped and counted, same as replay.
+
+Each ``poll()`` reads at most ``max_bytes`` (default 8 MiB), so pointing
+``dashboard --follow`` at a multi-hundred-MB journal costs a few bounded
+polls instead of one giant read that stalls a render cycle — the backlog
+drains across consecutive polls. The one exception is a single line longer
+than ``max_bytes`` (a pathological event): the read grows until its
+newline is found, because returning nothing forever would wedge the
+tailer.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import List
+from typing import List, Optional
 
 
 class JournalTailer:
@@ -23,8 +31,9 @@ class JournalTailer:
     Safe against a concurrently appending writer: frames are only consumed
     at newline boundaries, so a torn in-flight line is never half-read."""
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, max_bytes: Optional[int] = 8 << 20):
         self.path = path
+        self.max_bytes = max_bytes   # per-poll read budget; None = unbounded
         self.offset = 0          # bytes consumed (always at a \n boundary)
         self.skipped = 0         # complete-but-undecodable lines dropped
 
@@ -39,9 +48,21 @@ class JournalTailer:
             self.offset = 0
         if size == self.offset:
             return []
+        unread = size - self.offset
+        budget = unread if self.max_bytes is None else min(unread,
+                                                           self.max_bytes)
         with open(self.path, "rb") as f:
             f.seek(self.offset)
-            data = f.read()
+            data = f.read(budget)
+            # a single line longer than the budget: grow until its newline
+            # shows up (or we hit the size we measured) — a bounded poll
+            # must never turn an oversized line into a permanent stall
+            while (b"\n" not in data and len(data) < unread):
+                more = f.read(min(unread - len(data),
+                                  self.max_bytes or unread))
+                if not more:
+                    break
+                data += more
         end = data.rfind(b"\n")
         if end < 0:
             return []            # only a torn line so far — wait for it

@@ -137,6 +137,19 @@ def replay_trace(policy, workload, hosts: Sequence[HostSpec], *,
         if journal is not None:
             journal.append(dict(ev, ts=round(now[0], 6)))
 
+    def jspan(name: str, t_start: float, t_end: float, **args) -> None:
+        """A `span` journal event with an explicit simulated start ts —
+        the same event kind a journal-backed live server records, so the
+        exporter / critical-path pass consume either interchangeably."""
+        if journal is None or t_end < t_start:
+            return
+        ev = {"ev": "span", "name": name, "ts": round(t_start, 6),
+              "dur": round(t_end - t_start, 6), "cat": "trial"}
+        for k, v in args.items():
+            if v is not None:
+                ev[k] = v
+        journal.append(ev)
+
     def jrnl_status(tid: int) -> None:
         rec = svc.db.trials[tid]
         jrnl({"ev": "status", "trial_id": tid, "status": rec.status.value,
@@ -152,6 +165,8 @@ def replay_trace(policy, workload, hosts: Sequence[HostSpec], *,
             if rep.env_steps is not None:
                 ev["env_steps"] = rep.env_steps
             jrnl(ev)
+            jspan("trial.phase", rep.t_start, rep.t_end,
+                  trial_id=rep.trial_id, phase=rep.phase, node=rep.node)
             if rep.decision is not Decision.CONTINUE:
                 jrnl_status(rep.trial_id)
 
@@ -179,7 +194,8 @@ def replay_trace(policy, workload, hosts: Sequence[HostSpec], *,
             return
         ev = {"ev": "acquire", "trial_id": rec.trial_id,
               "hparams": rec.hparams, "node": host,
-              "requeued": rec.requeued, "t": rec.start_time}
+              "requeued": rec.requeued, "t": rec.start_time,
+              "ctx": f"h{host}"}   # the simulated host IS the trace ctx
         if rec.bracket_id:
             ev["bracket"] = rec.bracket_id
         jrnl(ev)
@@ -235,6 +251,8 @@ def replay_trace(policy, workload, hosts: Sequence[HostSpec], *,
             return
         jrnl({"ev": "report", "trial_id": rec.trial_id, "phase": phase,
               "metric": metric, "t": now[0], "env_steps": steps})
+        jspan("trial.phase", t_start, now[0], trial_id=rec.trial_id,
+              phase=phase, node=host)
         drain()
         after_verdict(host, rec, phase, verdict, t_start, now[0], metric,
                       journal_status=True)

@@ -45,6 +45,18 @@ def test_telemetry_doc_covers_every_metric_name():
         "telemetry.METRIC_SCHEMA needs a row in the vocabulary tables")
 
 
+def test_telemetry_doc_covers_every_span_name():
+    """Same rule for the span vocabulary: every name in SPAN_SCHEMA must
+    appear backticked in docs/telemetry.md."""
+    from repro.telemetry import SPAN_SCHEMA
+    doc = open(os.path.join(REPO, "docs", "telemetry.md"),
+               encoding="utf-8").read()
+    missing = [n for n in SPAN_SCHEMA if f"`{n}`" not in doc]
+    assert not missing, (
+        f"docs/telemetry.md lacks span names {missing}: every entry in "
+        "telemetry.SPAN_SCHEMA needs a row in the span vocabulary table")
+
+
 def test_markdown_links_resolve():
     proc = subprocess.run(
         [sys.executable, os.path.join(REPO, "tools", "check_links.py"),
