@@ -34,10 +34,12 @@ def _suites(fast: bool):
         from benchmarks import multihost_benches as mhb
         from benchmarks import pbt_benches as pbt
         from benchmarks import population_benches as pb
+        from benchmarks import server_load as sl
         from benchmarks import sharded_benches as shb
         from benchmarks import telemetry_benches as tb
         from benchmarks import trace_benches as trb
         suites += [
+            ("server_load", sl.bench_server_load),
             ("ga3c_throughput", sb.bench_ga3c_throughput),
             ("lm_train_step", sb.bench_lm_train_step),
             ("metaopt_rl_real", mb.bench_metaopt_rl_real),

@@ -716,14 +716,88 @@ class OptimizationService:
                 self.db.set_status(trial_id, TrialStatus.KILLED,
                                    self.clock())
 
+    def state_snapshot(self) -> dict:
+        """A JSON-able snapshot of the replayable service state: trials,
+        phase-metric lists, id counter, requeue queue. This is exactly what
+        ``replay`` reconstructs from a full journal — ``Journal.compact``
+        writes it as one ``snapshot`` event so restart replay is O(live
+        trials) instead of O(history). Barrier state is deliberately
+        absent: replay never parks (withheld reports are only journaled at
+        resolution), so both paths leave the barrier freshly built."""
+        with self._lock:
+            trials = []
+            for tid in sorted(self.db.trials):
+                rec = self.db.trials[tid]
+                t: Dict[str, Any] = {
+                    "trial_id": rec.trial_id, "hparams": rec.hparams,
+                    "status": rec.status.value,
+                    "reports": [[m, tt] for m, tt in rec.reports],
+                    "start_time": rec.start_time}
+                if rec.node is not None:
+                    t["node"] = rec.node
+                if rec.requeued:
+                    t["requeued"] = True
+                if rec.bracket_id:
+                    t["bracket"] = rec.bracket_id
+                if rec.end_time is not None:
+                    t["end_time"] = rec.end_time
+                trials.append(t)
+            return {
+                "v": 1,
+                "next_id": self._next_id,
+                "requeue": [[hp, b] for hp, b in self._requeue],
+                "trials": trials,
+                # JSON keys are strings; restore converts back to int
+                "phase_metrics": {str(p): list(ms) for p, ms
+                                  in sorted(self.db.phase_metrics.items())},
+            }
+
+    def _restore_snapshot(self, state: dict) -> List[tuple]:
+        """Rebuild db / scheduler accounting / id counter from a
+        ``state_snapshot`` dict; returns the snapshot's requeue entries as
+        ``(hparams, bracket_id)`` tuples (the caller seeds its pending
+        list with them, ahead of any tail-event requeues). Trials are
+        restored in id order — every scheduler's
+        ``note_replayed_trial`` only counts (HyperTrick/random budgets,
+        Hyperband fill order), so id order reproduces the original
+        acquire-order accounting exactly."""
+        for t in state.get("trials", []):
+            rec = TrialRecord(t["trial_id"], t["hparams"],
+                              status=TrialStatus(t["status"]),
+                              node=t.get("node"),
+                              requeued=t.get("requeued", False),
+                              bracket_id=t.get("bracket", 0),
+                              reports=[tuple(r) for r in
+                                       t.get("reports", [])],
+                              start_time=t.get("start_time", 0.0),
+                              end_time=t.get("end_time"))
+            self.db.trials[rec.trial_id] = rec
+            self.scheduler.note_replayed_trial(rec.hparams, rec.requeued)
+        for p, ms in state.get("phase_metrics", {}).items():
+            self.db.phase_metrics[int(p)] = list(ms)
+        self._next_id = max(self._next_id, int(state.get("next_id", 0)))
+        return [(hp, b) for hp, b in state.get("requeue", [])]
+
     def replay(self, events: List[dict],
                reclaim_running: bool = True) -> List[TrialRecord]:
         """Rebuild full service state (db, id counter, scheduler budget
         accounting, requeue queue) from journaled events — the service-level
         counterpart of ``KnowledgeDB.replay``. Returns the records that were
-        RUNNING at death and got reclaimed (marked CRASHED + requeued)."""
-        self.db.replay(events)
+        RUNNING at death and got reclaimed (marked CRASHED + requeued).
+
+        A compacted journal starts with a ``snapshot`` event: state is
+        restored from the newest snapshot and only the events after it are
+        applied — O(live trials + tail), not O(history)."""
+        snap_i = None
+        for i, ev in enumerate(events):
+            if ev.get("ev") == "snapshot":
+                snap_i = i
         pending = []              # requeued (hparams, bracket) not re-acquired
+        if snap_i is not None:
+            with self._lock:
+                pending = self._restore_snapshot(events[snap_i]["state"])
+            events = events[snap_i + 1:]
+        self.db.replay(events)
         for ev in events:
             kind = ev.get("ev")
             if kind == "requeue":

@@ -2,14 +2,17 @@
 
 One persistent socket per client; calls are serialized by a lock so a
 background heartbeat thread can share the connection with the main
-acquire/report loop.
+acquire/report loop. A client bound to a named ``search`` stamps the
+tenant id on every frame (multi-tenant servers route on it); the default
+``search=None`` keeps every frame byte-identical to the single-search
+wire.
 """
 from __future__ import annotations
 
 import socket
 import threading
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 from repro.core.scheduler import ReportReply
 from repro.distributed import protocol as proto
@@ -34,7 +37,8 @@ class Pending:
 
 class ServiceClient:
     def __init__(self, host: str, port: int, timeout: float = 60.0,
-                 trace_ctx: Optional[str] = None):
+                 trace_ctx: Optional[str] = None,
+                 search: Optional[str] = None):
         self._sock = socket.create_connection((host, port), timeout=timeout)
         self._sock.settimeout(timeout)
         self._lock = threading.Lock()
@@ -43,6 +47,8 @@ class ServiceClient:
         # stitch this worker's spans onto its own clock. None (the
         # default) keeps every frame byte-identical to an untraced client.
         self.trace_ctx = trace_ctx
+        # multi-tenancy (opt-in): the search id stamped on every frame
+        self.search = search
 
     def _trace(self, t: Optional[float]) -> Optional[Dict[str, Any]]:
         if self.trace_ctx is None:
@@ -73,7 +79,8 @@ class ServiceClient:
         caller's clock at send (the t_start/t_end timebase) when the
         client traces."""
         resp = self._call(proto.AcquireRequest(node=node, rung=rung,
-                                               trace=self._trace(trace_t)))
+                                               trace=self._trace(trace_t),
+                                               search=self.search))
         if resp.trial_id is None:
             if resp.retry_after is not None:
                 return Pending(resp.retry_after)
@@ -84,22 +91,18 @@ class ServiceClient:
                       rung: Optional[int] = None,
                       trace_t: Optional[float] = None):
         """Lease up to ``slots`` trials in one round-trip (population
-        workers). A list of RemoteTrials (possibly fewer than ``slots``),
-        a Pending marker, or None (budget spent for good). ``rung`` as in
-        :meth:`acquire`."""
-        resp = self._call(proto.AcquireRequest(node=node,
-                                               slots=max(1, slots),
-                                               rung=rung,
-                                               trace=self._trace(trace_t)))
-        if resp.trial_id is None:
+        workers) via the batched ``acquire_batch`` verb. A list of
+        RemoteTrials (possibly fewer than ``slots``), a Pending marker, or
+        None (budget spent for good). ``rung`` as in :meth:`acquire`."""
+        resp = self._call(proto.AcquireBatchRequest(
+            node=node, slots=max(1, slots), rung=rung,
+            trace=self._trace(trace_t), search=self.search))
+        if not resp.leases:
             if resp.retry_after is not None:
                 return Pending(resp.retry_after)
             return None
-        trials = [RemoteTrial(resp.trial_id, resp.hparams, resp.n_phases)]
-        for extra in (resp.batch or []):
-            trials.append(RemoteTrial(extra["trial_id"], extra["hparams"],
-                                      resp.n_phases))
-        return trials
+        return [RemoteTrial(e["trial_id"], e["hparams"], resp.n_phases)
+                for e in resp.leases]
 
     def report(self, trial_id: int, phase: int, metric: float,
                t_start: float = 0.0, t_end: float = 0.0,
@@ -117,28 +120,63 @@ class ServiceClient:
             t_start=t_start, t_end=t_end, node=node,
             demote=True if demote else None,
             env_steps=int(env_steps) if env_steps is not None else None,
-            trace=self._trace(trace_t)))
+            trace=self._trace(trace_t), search=self.search))
         return ReportReply(resp.decision,
                            clone_from=getattr(resp, "clone_from", None),
                            perturb=getattr(resp, "perturb", None))
+
+    def report_batch(self, reports: List[dict],
+                     node: Optional[int] = None,
+                     trace_t: Optional[float] = None) -> List[ReportReply]:
+        """Send many reports in one round-trip (the ``report_batch``
+        verb). Each entry is a dict with the :meth:`report` fields —
+        ``trial_id``/``phase``/``metric`` required, ``t_start``/``t_end``/
+        ``demote``/``env_steps``/``node`` optional. Returns one
+        ``ReportReply`` per entry, index-aligned; an entry the server
+        rejected (unknown trial, bad fields) maps to ``"stop"`` — the
+        same abandon-the-trial signal the per-trial path turns errors
+        into."""
+        resp = self._call(proto.ReportBatchRequest(
+            reports=reports, node=node, trace=self._trace(trace_t),
+            search=self.search))
+        out = []
+        for rep in resp.replies:
+            if "error" in rep:
+                out.append(ReportReply("stop"))
+            else:
+                out.append(ReportReply(rep["decision"],
+                                       clone_from=rep.get("clone_from"),
+                                       perturb=rep.get("perturb")))
+        return out
 
     def stats(self) -> dict:
         """The server's live telemetry snapshot (the optional ``stats``
         verb): the metrics-registry snapshot plus ``live_leases``. Raises
         ``ServiceError`` against a server that predates the verb."""
-        return self._call(proto.StatsRequest()).stats
+        return self._call(proto.StatsRequest(search=self.search)).stats
 
     def heartbeat(self, trial_id: int) -> bool:
-        return self._call(proto.HeartbeatRequest(trial_id=trial_id)).ok
+        return self._call(proto.HeartbeatRequest(
+            trial_id=trial_id, search=self.search)).ok
 
     def crash(self, trial_id: int, reason: str = "") -> None:
-        self._call(proto.CrashRequest(trial_id=trial_id, reason=reason))
+        self._call(proto.CrashRequest(trial_id=trial_id, reason=reason,
+                                      search=self.search))
 
     def summary(self) -> dict:
-        return self._call(proto.SummaryRequest()).summary
+        return self._call(proto.SummaryRequest(search=self.search)).summary
 
     def shutdown(self) -> None:
-        self._call(proto.ShutdownRequest())
+        """Stop the whole server (tenantless clients), or detach this
+        client's search from a multi-tenant server, leaving it running
+        for the others."""
+        self._call(proto.ShutdownRequest(search=self.search))
+
+    def detach_search(self) -> None:
+        """Explicitly detach this client's search (requires ``search``)."""
+        if self.search is None:
+            raise ValueError("client is not bound to a search")
+        self._call(proto.ShutdownRequest(search=self.search))
 
     def close(self) -> None:
         try:

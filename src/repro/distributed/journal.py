@@ -47,6 +47,43 @@ class Journal:
             if self._fsync:
                 os.fsync(self._f.fileno())
 
+    def compact(self, state: dict, archive: bool = True) -> int:
+        """Replace the journal with one ``snapshot`` event carrying
+        ``state`` (``OptimizationService.state_snapshot()``), so restart
+        replay is O(live trials) instead of O(history). The swap is
+        crash-safe: the snapshot is written to a temp file, fsynced, and
+        ``os.replace``d over the journal — a crash mid-compaction leaves
+        either the old journal or the new one, never a torn mix.
+
+        With ``archive`` (default), the compacted-away lines are first
+        appended to ``<path>.history`` so nothing is lost to offline
+        consumers: ``read_full_history`` concatenates history + current
+        and reproduces the exact original event stream (dashboards,
+        ``derive_spans``, Perfetto export all keep working). Returns the
+        number of lines compacted away."""
+        with self._lock:
+            self._f.flush()
+            with open(self.path, encoding="utf-8") as f:
+                old_lines = f.readlines()
+            if archive and old_lines:
+                with open(self.path + ".history", "a",
+                          encoding="utf-8") as hist:
+                    hist.writelines(old_lines)
+                    hist.flush()
+                    os.fsync(hist.fileno())
+            snap = {"ev": "snapshot", "state": state,
+                    "ts": round(time.time(), 6)}
+            tmp = self.path + ".tmp"
+            with open(tmp, "w", encoding="utf-8") as f:
+                f.write(json.dumps(snap, sort_keys=True,
+                                   default=json_default) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+            self._f.close()
+            os.replace(tmp, self.path)
+            self._f = open(self.path, "a", encoding="utf-8")
+        return len(old_lines)
+
     def close(self) -> None:
         with self._lock:
             if not self._f.closed:
@@ -70,6 +107,24 @@ def read_events(path: str) -> Iterator[dict]:
                 yield json.loads(line)
             except json.JSONDecodeError:
                 continue
+
+
+def read_full_history(path: str) -> Iterator[dict]:
+    """Yield the complete event stream across compactions: the archived
+    ``<path>.history`` lines (in order), then the live journal. Snapshot
+    events are filtered out — the concatenation is byte-for-byte the
+    stream an uncompacted journal would hold, which is what offline
+    consumers (``derive_spans``, export, the dashboard's backfill) want."""
+    hist = path + ".history"
+    if os.path.exists(hist):
+        for ev in read_events(hist):
+            # a second compaction archives the previous snapshot line too
+            if ev.get("ev") != "snapshot":
+                yield ev
+    if os.path.exists(path):
+        for ev in read_events(path):
+            if ev.get("ev") != "snapshot":
+                yield ev
 
 
 def replay_journal(path: str, service: OptimizationService,

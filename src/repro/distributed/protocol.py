@@ -36,6 +36,12 @@ def message(type_name: str):
 
 
 # -- requests ---------------------------------------------------------------
+# Multi-tenancy: every request may carry a ``search`` id naming the tenant
+# (one OptimizationService + journal per search inside one server process).
+# Omitted when None, so a single-search client's frames stay byte-identical
+# to the pre-tenant wire and an old server ignores the field (evolution
+# rule). An unknown search id answers `error` without dropping the
+# connection.
 @message("acquire")
 class AcquireRequest:
     node: Optional[int] = None
@@ -55,7 +61,8 @@ class AcquireRequest:
     # client doesn't trace, so untraced frames stay byte-identical; an old
     # server drops the unknown field (evolution rule).
     trace: Optional[Dict[str, Any]] = None
-    OMIT_IF_NONE = ("rung", "trace")
+    search: Optional[str] = None
+    OMIT_IF_NONE = ("rung", "trace", "search")
 
 
 @message("report")
@@ -83,28 +90,38 @@ class ReportRequest:
     # span. Omitted when the client doesn't trace (byte-identical frame);
     # old servers ignore it.
     trace: Optional[Dict[str, Any]] = None
-    OMIT_IF_NONE = ("demote", "env_steps", "trace")
+    search: Optional[str] = None
+    OMIT_IF_NONE = ("demote", "env_steps", "trace", "search")
 
 
 @message("heartbeat")
 class HeartbeatRequest:
     trial_id: int
+    search: Optional[str] = None
+    OMIT_IF_NONE = ("search",)
 
 
 @message("crash")
 class CrashRequest:
     trial_id: int
     reason: str = ""
+    search: Optional[str] = None
+    OMIT_IF_NONE = ("search",)
 
 
 @message("summary")
 class SummaryRequest:
-    pass
+    search: Optional[str] = None
+    OMIT_IF_NONE = ("search",)
 
 
 @message("shutdown")
 class ShutdownRequest:
-    pass
+    # with a search id: detach just that tenant (its journal closes, its
+    # leases drop) and leave the server running for the others; without
+    # one: stop the whole server (the single-tenant wire, unchanged).
+    search: Optional[str] = None
+    OMIT_IF_NONE = ("search",)
 
 
 @message("stats")
@@ -113,8 +130,42 @@ class StatsRequest:
     Purely additive — old clients never send it, an old server drops the
     connection on the unknown type (evolution rule 4; tooling-only, so
     that is acceptable), and nothing in the search protocol depends on
-    it."""
-    pass
+    it. With a ``search`` id the snapshot is that tenant's registry."""
+    search: Optional[str] = None
+    OMIT_IF_NONE = ("search",)
+
+
+@message("acquire_batch")
+class AcquireBatchRequest:
+    """Batched acquire: lease up to ``slots`` trials in one frame. Unlike
+    ``acquire`` with slots>1 (whose reply splits primary + ``batch``), the
+    reply is one uniform ``leases`` list — the shape a population host
+    with hundreds of slots actually wants. New verb, so an old server
+    drops the connection (evolution rule 4); batched clients are new code
+    and the classic verb remains for old peers."""
+    node: Optional[int] = None
+    slots: int = 1
+    rung: Optional[int] = None
+    trace: Optional[Dict[str, Any]] = None
+    search: Optional[str] = None
+    OMIT_IF_NONE = ("rung", "trace", "search")
+
+
+@message("report_batch")
+class ReportBatchRequest:
+    """Batched report: one frame carrying many per-trial reports — a
+    population host reports a whole generation in one round-trip instead
+    of one per slot. ``reports`` entries are dicts with the classic
+    ``report`` fields (trial_id, phase, metric, t_start, t_end, and
+    optionally demote / env_steps / node); frame-level ``node`` /
+    ``trace`` / ``search`` apply to every entry. Replies come back in
+    ``replies``, index-aligned; a bad entry yields an ``error`` reply at
+    its index without failing the rest of the batch."""
+    reports: list = dataclasses.field(default_factory=list)
+    node: Optional[int] = None
+    trace: Optional[Dict[str, Any]] = None
+    search: Optional[str] = None
+    OMIT_IF_NONE = ("trace", "search")
 
 
 # -- responses --------------------------------------------------------------
@@ -183,6 +234,25 @@ class StatsResponse:
     # ``telemetry.MetricsRegistry.snapshot()`` plus server-side extras
     # (live_leases) — see docs/telemetry.md for the metric vocabulary
     stats: Dict[str, Any]
+
+
+@message("acquire_batch_ok")
+class AcquireBatchResponse:
+    # one dict per granted lease: {"trial_id", "hparams"} plus optional
+    # "bracket_id". Empty when the budget is spent; ``retry_after`` then
+    # carries the lease-outstanding poll hint (same rule as acquire_ok).
+    leases: list = dataclasses.field(default_factory=list)
+    n_phases: int = 1
+    retry_after: Optional[float] = None
+    OMIT_IF_NONE = ("retry_after",)
+
+
+@message("report_batch_ok")
+class ReportBatchResponse:
+    # index-aligned with the request's reports: {"decision": ...} plus
+    # optional "clone_from"/"perturb" (PBT), or {"error": ...} for an
+    # entry the server rejected (unknown trial, bad fields).
+    replies: list = dataclasses.field(default_factory=list)
 
 
 @message("error")
@@ -266,3 +336,37 @@ def recv_message(sock: socket.socket):
     if payload is None:
         raise ProtocolError("connection closed before payload")
     return decode(payload)
+
+
+class FrameBuffer:
+    """Incremental decoder for a non-blocking socket: ``feed`` whatever
+    bytes ``recv`` returned, get back every complete message they finish.
+    Partial frames stay buffered across calls — the selector-core server's
+    per-connection read state. Raises ``ProtocolError`` on an oversized
+    frame or a bad payload (the caller drops the connection, exactly as
+    the blocking ``recv_message`` path would)."""
+
+    __slots__ = ("_buf",)
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> list:
+        self._buf += data
+        msgs = []
+        while True:
+            if len(self._buf) < _HEADER.size:
+                return msgs
+            (length,) = _HEADER.unpack_from(self._buf)
+            if length > MAX_MESSAGE_BYTES:
+                raise ProtocolError(f"frame too large: {length} bytes")
+            end = _HEADER.size + length
+            if len(self._buf) < end:
+                return msgs
+            payload = bytes(self._buf[_HEADER.size:end])
+            del self._buf[:end]
+            msgs.append(decode(payload))
+
+    def pending(self) -> int:
+        """Bytes buffered but not yet forming a complete frame."""
+        return len(self._buf)

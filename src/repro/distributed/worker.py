@@ -100,13 +100,18 @@ class WorkerAgent:
     def __init__(self, client: ServiceClient, objective: Callable,
                  heartbeat_interval: float = 2.0,
                  node: Optional[int] = None, bracket: bool = False,
-                 park_poll_interval: float = 0.2):
+                 park_poll_interval: float = 0.2, batched: bool = True):
         self.client = client
         self.objective = objective
         self.heartbeat_interval = heartbeat_interval
         self.node = node
         self.bracket = bracket
         self.park_poll_interval = park_poll_interval
+        # speak the batched report verb (one-entry batches for a scalar
+        # worker — same round-trip count, but the whole fleet exercises
+        # one server code path). False talks the classic per-trial verb,
+        # e.g. against a pre-batch server.
+        self.batched = batched
         self._active: Optional[int] = None     # trial currently leased
         self._lost: set = set()                # trials whose lease was lost
         self._stop = threading.Event()
@@ -173,10 +178,8 @@ class WorkerAgent:
                     return                      # lease reclaimed — abandon
                 while True:
                     try:
-                        decision = self.client.report(
-                            trial.trial_id, phase, metric,
-                            t_start=t_start, t_end=t_end, node=self.node,
-                            trace_t=self._clock())
+                        decision = self._report(trial.trial_id, phase,
+                                                metric, t_start, t_end)
                     except (ServiceError, OSError, RuntimeError):
                         return                  # stale trial or server gone
                     if decision != "parked":
@@ -197,6 +200,17 @@ class WorkerAgent:
                     trial.hparams = dict(decision.perturb)
         finally:
             self._active = None
+
+    def _report(self, trial_id: int, phase: int, metric: float,
+                t_start: float, t_end: float):
+        if self.batched:
+            return self.client.report_batch(
+                [{"trial_id": trial_id, "phase": phase, "metric": metric,
+                  "t_start": t_start, "t_end": t_end}],
+                node=self.node, trace_t=self._clock())[0]
+        return self.client.report(trial_id, phase, metric,
+                                  t_start=t_start, t_end=t_end,
+                                  node=self.node, trace_t=self._clock())
 
     def _heartbeat_loop(self):
         while not self._stop.wait(self.heartbeat_interval):
@@ -236,6 +250,13 @@ def main(argv=None) -> int:
                          "acquires carry the rung-0 hint and 'parked' "
                          "report decisions are polled until the rung "
                          "cohort (pooled across every host) resolves")
+    ap.add_argument("--unbatched", action="store_true",
+                    help="report via the classic per-trial verb instead of "
+                         "report_batch (for servers predating the batch "
+                         "verbs)")
+    ap.add_argument("--search", default=None,
+                    help="tenant id on a multi-tenant server; omit for the "
+                         "default (single-search) tenant")
     args = ap.parse_args(argv)
 
     if args.spec is not None:
@@ -266,14 +287,15 @@ def main(argv=None) -> int:
 
     objective = resolve_objective(spec)
     try:
-        client = ServiceClient(args.host, args.port)
+        client = ServiceClient(args.host, args.port, search=args.search)
     except OSError as e:
         print(f"cannot reach server at {args.host}:{args.port}: {e}")
         return 1
     with client:
         n = WorkerAgent(client, objective,
                         heartbeat_interval=args.heartbeat_interval,
-                        node=args.node, bracket=args.bracket).run()
+                        node=args.node, bracket=args.bracket,
+                        batched=not args.unbatched).run()
     print(f"worker node={args.node} ran {n} trials")
     return 0
 

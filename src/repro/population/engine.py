@@ -110,6 +110,14 @@ class LocalDriver:
                            clone_from=verdict.clone_from,
                            perturb=verdict.perturb)
 
+    def report_many(self, reports: List[dict]) -> List["ReportReply"]:
+        """Batched reports (one engine generation). In-process there is no
+        round-trip to save, so this simply loops — but the engine speaks
+        one interface either way."""
+        return [self.report(r["trial_id"], r["phase"], r["metric"],
+                            r["t_start"], r["t_end"],
+                            env_steps=r.get("env_steps")) for r in reports]
+
     def poll_lost(self) -> set:
         """Trials whose lease was revoked out from under us (remote only)."""
         return set()
@@ -162,6 +170,28 @@ class RemoteDriver:
             # heartbeat and this report): strictly local effect — drop the
             # one slot, keep the rest of the population training
             return "stop"
+
+    def report_many(self, reports: List[dict]) -> List:
+        """A whole generation's reports in ONE ``report_batch`` frame —
+        the round-trip count per generation drops from slots to 1 (the
+        load harness's batched-vs-per-trial headline). A server-rejected
+        entry comes back ``"stop"`` (the client maps entry errors), and a
+        transport-level failure stops every slot in the batch — the same
+        strictly-local abandonment the per-trial path produces."""
+        from repro.distributed.client import ServiceError
+        entries = []
+        for r in reports:
+            e = {"trial_id": r["trial_id"], "phase": r["phase"],
+                 "metric": r["metric"], "t_start": r["t_start"],
+                 "t_end": r["t_end"]}
+            if r.get("env_steps") is not None:
+                e["env_steps"] = r["env_steps"]
+            entries.append(e)
+        try:
+            return self.client.report_batch(entries, node=self.node,
+                                            trace_t=self._now())
+        except ServiceError:
+            return ["stop"] * len(reports)
 
     def mark_lost(self, trial_id: int) -> None:
         self._lost.add(trial_id)
@@ -668,7 +698,26 @@ class PopulationEngine:
                     self.total_env_steps / elapsed)
         return self.records
 
+    @staticmethod
+    def _report_many(driver, reports: List[dict]) -> List:
+        """Send a generation's reports through the driver — one
+        ``report_many`` call when the driver has it (RemoteDriver: one
+        wire frame), a per-report loop otherwise (scripted test
+        drivers)."""
+        many = getattr(driver, "report_many", None)
+        if many is not None:
+            return many(reports)
+        return [driver.report(r["trial_id"], r["phase"], r["metric"],
+                              r["t_start"], r["t_end"],
+                              env_steps=r.get("env_steps"))
+                for r in reports]
+
     def _poll_phases(self, driver, t0: float) -> None:
+        # two passes so every slot that finished its phase this iteration
+        # reports in ONE driver call (one wire round-trip per generation,
+        # not per slot): first collect the finished slots, then apply the
+        # index-aligned decisions
+        ready: List[tuple] = []
         for bucket in self.buckets.values():
             if not bucket.n_active:
                 continue
@@ -695,32 +744,40 @@ class PopulationEngine:
                 self.spans.end("engine.phase", phase_s, cat="engine",
                                trial_id=meta.trial_id, phase=meta.phase,
                                slot=meta.slot_id)
-                decision = driver.report(meta.trial_id, meta.phase, score,
-                                         meta.phase_t0, t_now,
-                                         env_steps=phase_steps)
-                if decision == "parked":
-                    # rung phase: the service withheld the report at the
-                    # barrier — mask the slot (state frozen on device) and
-                    # keep the exact report for the barrier polls
-                    meta.pending = (score, meta.phase_t0, t_now, phase_steps)
-                    meta.parked_at = time.perf_counter()
-                    bucket.park(i)
-                    continue
-                self.records.append((meta.trial_id, meta.slot_id, meta.phase,
-                                     meta.phase_t0, t_now, score))
-                if decision == "stop":
-                    bucket.release(i)
-                else:
-                    if getattr(decision, "clone_from", None) is not None:
-                        # PBT exploit/explore: the verdict rode the report
-                        # reply — execute the copy device-side and adopt
-                        # the perturbed hyperparameters before continuing
-                        self._exploit(bucket, i, meta, decision)
-                    meta.phase += 1
-                    meta.updates_in_phase = 0
-                    meta.start_n = float(fin_n[i])
-                    meta.start_sum = float(fin_sum[i])
-                    meta.phase_t0 = t_now
+                ready.append((bucket, fin_n, fin_sum, i, meta, score,
+                              t_now, phase_steps))
+        if not ready:
+            return
+        decisions = self._report_many(driver, [
+            {"trial_id": m.trial_id, "phase": m.phase, "metric": score,
+             "t_start": m.phase_t0, "t_end": t_now,
+             "env_steps": phase_steps}
+            for (_, _, _, _, m, score, t_now, phase_steps) in ready])
+        for ((bucket, fin_n, fin_sum, i, meta, score, t_now,
+              phase_steps), decision) in zip(ready, decisions):
+            if decision == "parked":
+                # rung phase: the service withheld the report at the
+                # barrier — mask the slot (state frozen on device) and
+                # keep the exact report for the barrier polls
+                meta.pending = (score, meta.phase_t0, t_now, phase_steps)
+                meta.parked_at = time.perf_counter()
+                bucket.park(i)
+                continue
+            self.records.append((meta.trial_id, meta.slot_id, meta.phase,
+                                 meta.phase_t0, t_now, score))
+            if decision == "stop":
+                bucket.release(i)
+            else:
+                if getattr(decision, "clone_from", None) is not None:
+                    # PBT exploit/explore: the verdict rode the report
+                    # reply — execute the copy device-side and adopt
+                    # the perturbed hyperparameters before continuing
+                    self._exploit(bucket, i, meta, decision)
+                meta.phase += 1
+                meta.updates_in_phase = 0
+                meta.start_n = float(fin_n[i])
+                meta.start_sum = float(fin_sum[i])
+                meta.phase_t0 = t_now
 
     # -- PBT exploit/explore (CLONE verdicts) -------------------------------
     def _find_slot(self, trial_id: int
@@ -779,42 +836,53 @@ class PopulationEngine:
         → promoted, unpark into the next phase; ``"stop"`` → demoted (or
         the lease is gone), free the slot for the admission path to
         hot-swap a fresh configuration."""
+        polls: List[tuple] = []
         for bucket in self.buckets.values():
-            counters: Optional[Tuple[np.ndarray, np.ndarray]] = None
             for i in range(bucket.capacity):
                 meta = bucket.meta[i]
                 if meta is None or bucket.active[i] or meta.pending is None:
                     continue
-                score, ts, te, phase_steps = meta.pending
-                self.metrics.counter("engine.park_polls").inc()
-                decision = driver.report(meta.trial_id, meta.phase, score,
-                                         ts, te, env_steps=phase_steps)
-                if decision == "parked":
-                    continue
-                self.records.append((meta.trial_id, meta.slot_id, meta.phase,
-                                     ts, te, score))
-                meta.pending = None
-                if meta.parked_at is not None:
-                    stall_s = time.perf_counter() - meta.parked_at
-                    self.metrics.histogram("engine.park_stall_s").observe(
-                        stall_s)
-                    self.spans.end("engine.park_stall", stall_s,
-                                   cat="engine", trial_id=meta.trial_id,
-                                   phase=meta.phase, slot=meta.slot_id)
-                    meta.parked_at = None
-                if decision == "stop":
-                    bucket.release(i)
-                    continue
-                if counters is None:
-                    counters = (np.asarray(bucket.loop.finished_n),
-                                np.asarray(bucket.loop.finished_sum))
-                fin_n, fin_sum = counters
-                meta.phase += 1
-                meta.updates_in_phase = 0
-                meta.start_n = float(fin_n[i])
-                meta.start_sum = float(fin_sum[i])
-                meta.phase_t0 = time.monotonic() - t0
-                bucket.unpark(i)
+                polls.append((bucket, i, meta))
+        if not polls:
+            return
+        self.metrics.counter("engine.park_polls").inc(len(polls))
+        decisions = self._report_many(driver, [
+            {"trial_id": m.trial_id, "phase": m.phase,
+             "metric": m.pending[0], "t_start": m.pending[1],
+             "t_end": m.pending[2], "env_steps": m.pending[3]}
+            for (_, _, m) in polls])
+        # lazily materialize each bucket's episode counters only when one
+        # of its slots actually unparks
+        counters: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        for (bucket, i, meta), decision in zip(polls, decisions):
+            if decision == "parked":
+                continue
+            score, ts, te, phase_steps = meta.pending
+            self.records.append((meta.trial_id, meta.slot_id, meta.phase,
+                                 ts, te, score))
+            meta.pending = None
+            if meta.parked_at is not None:
+                stall_s = time.perf_counter() - meta.parked_at
+                self.metrics.histogram("engine.park_stall_s").observe(
+                    stall_s)
+                self.spans.end("engine.park_stall", stall_s,
+                               cat="engine", trial_id=meta.trial_id,
+                               phase=meta.phase, slot=meta.slot_id)
+                meta.parked_at = None
+            if decision == "stop":
+                bucket.release(i)
+                continue
+            key = id(bucket)
+            if key not in counters:
+                counters[key] = (np.asarray(bucket.loop.finished_n),
+                                 np.asarray(bucket.loop.finished_sum))
+            fin_n, fin_sum = counters[key]
+            meta.phase += 1
+            meta.updates_in_phase = 0
+            meta.start_n = float(fin_n[i])
+            meta.start_sum = float(fin_sum[i])
+            meta.phase_t0 = time.monotonic() - t0
+            bucket.unpark(i)
 
     def _abandon(self, trial_ids: set) -> None:
         for bucket in self.buckets.values():

@@ -204,6 +204,10 @@ METRIC_SCHEMA: Dict[str, str] = {
     "server.connections.closed": "counter — TCP connections torn down",
     "server.connections.open": "gauge — currently open connections",
     "server.lease_reaps": "counter — leases expired by the reaper",
+    "server.batch_reports": ("counter — individual reports carried by "
+                             "report_batch frames"),
+    "server.compactions": "counter — journal snapshot compactions performed",
+    "server.searches.open": "gauge — tenant searches currently attached",
     # -- population/engine.py (the device) ----------------------------------
     "engine.env_steps": "counter — active-lane env transitions",
     "engine.updates": "counter — per-slot train-step executions",

@@ -1,0 +1,7 @@
+def pytest_configure(config):
+    # socket-bearing tests carry @pytest.mark.timeout: a per-test watchdog
+    # when pytest-timeout is installed, a registered no-op otherwise (the
+    # container image does not ship the plugin)
+    config.addinivalue_line(
+        "markers",
+        "timeout(seconds): per-test watchdog (pytest-timeout plugin)")

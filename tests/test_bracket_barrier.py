@@ -103,6 +103,7 @@ def test_unhinted_trials_never_park():
 # ---------------------------------------------------------------------------
 # the barrier over TCP: cohorts pool across connections
 # ---------------------------------------------------------------------------
+@pytest.mark.timeout(120)
 def test_bracket_cohort_pools_across_two_clients():
     """Two hosts, 2 trials each, eta=3: each host alone is below eta (no
     demotion possible), the POOLED cohort of 4 demotes exactly 4 // 3 = 1 —
@@ -143,6 +144,7 @@ def test_bracket_cohort_pools_across_two_clients():
         assert len(svc.db.trials[t.trial_id].reports) == 1
 
 
+@pytest.mark.timeout(120)
 def test_reaper_shrink_resolves_barrier_and_requeues():
     """A worker that dies mid-rung (lease expires) cannot wedge the
     barrier: the cohort shrinks, resolves on the survivors, and the dead
@@ -177,6 +179,7 @@ def test_reaper_shrink_resolves_barrier_and_requeues():
         live.close()
 
 
+@pytest.mark.timeout(120)
 def test_parked_member_death_shrinks_cohort():
     """Lease loss of a PARKED trial during the barrier: its withheld
     report is dropped and the remaining cohort resolves."""
@@ -211,6 +214,7 @@ def test_parked_member_death_shrinks_cohort():
         live.close()
 
 
+@pytest.mark.timeout(300)
 def test_bracket_search_completes_with_scalar_workers():
     """End-to-end: ProcessCluster(bracket_eta=...) runs one shared bracket
     over OS-process scalar workers (numpy-only objective) — the same wire
@@ -245,6 +249,7 @@ class _OneBadWorkerCluster(ProcessCluster):
         return super()._worker_cmd(port, node)
 
 
+@pytest.mark.timeout(300)
 def test_partial_worker_failure_is_surfaced_not_silent():
     policy = RandomSearchPolicy(_space(), 3, 2, seed=0)
     cluster = _OneBadWorkerCluster(2, {"kind": "synthetic", "sleep": 0.01},
@@ -269,6 +274,7 @@ class _OneHungWorkerCluster(ProcessCluster):
         return super()._worker_cmd(port, node)
 
 
+@pytest.mark.timeout(300)
 def test_hung_worker_cannot_stall_launcher_after_drain():
     policy = RandomSearchPolicy(_space(), 2, 2, seed=0)
     cluster = _OneHungWorkerCluster(2, {"kind": "synthetic", "sleep": 0.01},
@@ -303,6 +309,7 @@ def _spawn_worker(port: int, node: int, spec: dict,
         env=env)
 
 
+@pytest.mark.timeout(300)
 def test_killing_worker_mid_rung_resolves_via_reaper_shrink():
     """One worker process parks at rung 0; the other hangs inside its
     objective (its enrolled, unparked trial gates the cohort) and is
@@ -329,7 +336,7 @@ def test_killing_worker_mid_rung_resolves_via_reaper_shrink():
             time.sleep(1.5)                     # several TTLs: still parked
             assert not svc.barrier.rung_log
             hung.kill()                         # mid-rung worker death
-            hung.wait()
+            hung.wait(timeout=30)               # bounded: it was SIGKILL'd
             # lease expires -> cohort shrinks to the parked survivor ->
             # resolves -> survivor promoted, dead config requeued + rerun
             assert _wait_until(lambda: bool(svc.barrier.rung_log),
@@ -339,7 +346,7 @@ def test_killing_worker_mid_rung_resolves_via_reaper_shrink():
             for p in (hung, live):
                 if p.poll() is None:
                     p.kill()
-                    p.wait()
+                    p.wait(timeout=30)          # bounded: SIGKILL'd already
     first = svc.barrier.rung_log[0]
     assert first["n"] == 1 and not first["demoted"]     # shrink, then
     statuses = [t.status for t in svc.db.trials.values()]

@@ -1,0 +1,140 @@
+"""Journal compaction equivalence: snapshot + tail replay must be
+indistinguishable from replaying the full history.
+
+The fixture journal comes from a 1000-host ``replay_trace`` run against
+the real service (bracket barrier on, a slice of hosts failing, so the
+stream has parks, reaper crashes, requeues — every event kind). The
+compacted journal is built exactly the way a live server builds one:
+prefix events in the file, ``Journal.compact(state_snapshot())``, tail
+events appended after. Equivalence is byte-level on
+``state_snapshot()`` and object-level on ``derive_spans`` over
+``read_full_history``.
+"""
+import json
+import os
+
+import pytest
+
+from repro.core.hypertrick import RandomSearchPolicy
+from repro.core.search_space import LogUniform, SearchSpace
+from repro.core.service import OptimizationService
+from repro.core.simulator import ToyWorkload
+from repro.distributed.journal import (Journal, read_events,
+                                       read_full_history, replay_journal)
+from repro.telemetry.spans import derive_spans
+from repro.telemetry.trace import replay_trace, synthetic_trace
+
+
+def _space():
+    return SearchSpace({"x": LogUniform(0.01, 100.0)})
+
+
+def _policy():
+    return RandomSearchPolicy(_space(), 1000, 4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def trace_journal(tmp_path_factory):
+    """One 1000-host journaled trace run shared by the tests here."""
+    path = str(tmp_path_factory.mktemp("compaction") / "trace.jsonl")
+    with Journal(path) as j:
+        res = replay_trace(_policy(), ToyWorkload(seed=0),
+                           synthetic_trace(1000, seed=7, fail_frac=0.02,
+                                           fail_horizon=40.0),
+                           bracket_eta=3, lease_ttl=15.0, journal=j)
+    assert res.n_trials >= 1000          # requeues push past the budget
+    return path
+
+
+def _compact_at(src_path: str, dst_path: str, frac: float) -> int:
+    """Build ``dst_path`` the way a live compacting server would: the
+    first ``frac`` of the source lines are in the file when ``compact``
+    fires (snapshotting a service restored from exactly those events),
+    and the rest arrive afterwards. Returns the split index."""
+    lines = [ln for ln in open(src_path).read().splitlines(keepends=True)
+             if ln.strip()]
+    k = int(len(lines) * frac)
+    with open(dst_path, "w") as f:
+        f.writelines(lines[:k])
+    mid = OptimizationService(_policy(), bracket_eta=3)
+    # the server compacts from LIVE state: nothing is reclaimed — trials
+    # running at the snapshot keep running in the tail
+    mid.replay([json.loads(ln) for ln in lines[:k]], reclaim_running=False)
+    with Journal(dst_path) as j:
+        j.compact(mid.state_snapshot())
+        for ln in lines[k:]:
+            j.append(json.loads(ln))
+    return k
+
+
+def test_snapshot_plus_tail_replay_equals_full_replay(trace_journal,
+                                                      tmp_path):
+    compacted = str(tmp_path / "compacted.jsonl")
+    _compact_at(trace_journal, compacted, frac=0.6)
+
+    full = OptimizationService(_policy(), bracket_eta=3)
+    replay_journal(trace_journal, full)
+    snap = OptimizationService(_policy(), bracket_eta=3)
+    replay_journal(compacted, snap)
+
+    # byte-level: the reconstructed service state is identical
+    assert (json.dumps(full.state_snapshot(), sort_keys=True)
+            == json.dumps(snap.state_snapshot(), sort_keys=True))
+    # scheduler state: both sides resume identically — same summary and
+    # the same next grant (requeued configs first, same order)
+    assert full.db.summary() == snap.db.summary()
+    nxt_full, nxt_snap = full.acquire_trial(), snap.acquire_trial()
+    assert (nxt_full is None) == (nxt_snap is None)
+    if nxt_full is not None:
+        assert nxt_full.hparams == nxt_snap.hparams
+        assert nxt_full.trial_id == nxt_snap.trial_id
+    # barrier state: replay never parks, so both barriers are empty — but
+    # they must exist and agree
+    assert full.barrier is not None and snap.barrier is not None
+    assert full.barrier._parked == snap.barrier._parked
+    assert full.barrier.rung_log == snap.barrier.rung_log
+
+
+def test_full_history_and_derived_spans_survive_compaction(trace_journal,
+                                                           tmp_path):
+    compacted = str(tmp_path / "compacted.jsonl")
+    _compact_at(trace_journal, compacted, frac=0.6)
+    original = list(read_events(trace_journal))
+    stitched = list(read_full_history(compacted))
+    # the archived history + live tail is the original stream, event for
+    # event, with the snapshot line invisible
+    assert stitched == original
+    assert derive_spans(stitched) == derive_spans(original)
+
+
+def test_double_compaction_keeps_full_history(trace_journal, tmp_path):
+    """Compacting an already-compacted journal (the steady state of a
+    long-lived server) archives the previous snapshot line away and the
+    stitched stream still equals the original."""
+    compacted = str(tmp_path / "compacted.jsonl")
+    _compact_at(trace_journal, compacted, frac=0.4)
+    svc = OptimizationService(_policy(), bracket_eta=3)
+    svc.replay(list(read_events(compacted)), reclaim_running=False)
+    with Journal(compacted) as j:
+        j.compact(svc.state_snapshot())
+    assert sum(1 for _ in read_events(compacted)) == 1   # snapshot only
+    assert (list(read_full_history(compacted))
+            == list(read_events(trace_journal)))
+    # and the twice-compacted journal still replays to the full state
+    final = OptimizationService(_policy(), bracket_eta=3)
+    replay_journal(compacted, final)
+    full = OptimizationService(_policy(), bracket_eta=3)
+    replay_journal(trace_journal, full)
+    assert (json.dumps(final.state_snapshot(), sort_keys=True)
+            == json.dumps(full.state_snapshot(), sort_keys=True))
+
+
+def test_compaction_shrinks_live_journal(trace_journal, tmp_path):
+    compacted = str(tmp_path / "compacted.jsonl")
+    k = _compact_at(trace_journal, compacted, frac=0.6)
+    n_orig = sum(1 for _ in read_events(trace_journal))
+    n_live = sum(1 for _ in read_events(compacted))
+    n_hist = sum(1 for _ in read_events(compacted + ".history"))
+    assert n_live == (n_orig - k) + 1            # tail + one snapshot line
+    assert n_hist == k                           # everything archived
+    assert os.path.getsize(compacted) < os.path.getsize(trace_journal)

@@ -57,6 +57,7 @@ def test_protocol_roundtrip_all_messages():
         assert proto.decode(frame[4:]) == msg
 
 
+@pytest.mark.timeout(60)
 def test_protocol_framing_over_socketpair():
     a, b = socket.socketpair()
     sent = [proto.AcquireRequest(node=i) for i in range(5)]
@@ -97,6 +98,7 @@ def _run_agents(server, n_agents, objective, heartbeat_interval=0.1):
         c.close()
 
 
+@pytest.mark.timeout(120)
 def test_server_hypertrick_search_matches_thread_schema():
     objective = make_synthetic_objective(sleep=0.001, seed=1)
     policy = HyperTrick(_space(), w0=10, n_phases=3, eviction_rate=0.3,
@@ -118,6 +120,7 @@ def test_server_hypertrick_search_matches_thread_schema():
         assert key in remote_summary and key in thread_summary
 
 
+@pytest.mark.timeout(120)
 def test_lease_expiry_reclaims_and_requeues():
     policy = RandomSearchPolicy(_space(), n_trials=2, n_phases=1, seed=0)
     svc = OptimizationService(policy)
@@ -144,6 +147,7 @@ def test_lease_expiry_reclaims_and_requeues():
     assert svc.db.best_trial().status is TrialStatus.COMPLETED
 
 
+@pytest.mark.timeout(120)
 def test_heartbeat_keeps_lease_alive_and_late_report_is_stopped():
     policy = RandomSearchPolicy(_space(), n_trials=1, n_phases=2, seed=0)
     svc = OptimizationService(policy)
@@ -163,6 +167,7 @@ def test_heartbeat_keeps_lease_alive_and_late_report_is_stopped():
             assert svc.db.trials[trial.trial_id].reports == []
 
 
+@pytest.mark.timeout(120)
 def test_worker_crash_is_local_effect():
     objective = make_synthetic_objective(crash_above=10.0)
     configs = [{"x": 1.0}, {"x": 50.0}, {"x": 2.0}]
@@ -179,6 +184,7 @@ def test_worker_crash_is_local_effect():
 # ---------------------------------------------------------------------------
 # journal replay
 # ---------------------------------------------------------------------------
+@pytest.mark.timeout(120)
 def test_journal_replay_resumes_mid_search(tmp_path):
     path = str(tmp_path / "journal.jsonl")
     policy = RandomSearchPolicy(_space(), n_trials=4, n_phases=2, seed=3)
@@ -240,6 +246,7 @@ def test_journal_tolerates_torn_tail(tmp_path):
 # ---------------------------------------------------------------------------
 # OS-process workers (the acceptance scenario, scaled down)
 # ---------------------------------------------------------------------------
+@pytest.mark.timeout(300)
 def test_process_cluster_end_to_end():
     policy = RandomSearchPolicy(_space(), n_trials=4, n_phases=2, seed=0)
     cluster = ProcessCluster(2, {"kind": "synthetic", "sleep": 0.01},
@@ -260,3 +267,69 @@ def test_resolve_objective_specs():
     assert metric == pytest.approx(0.0)
     with pytest.raises(ValueError):
         resolve_objective({"kind": "no_such"})
+
+
+# ---------------------------------------------------------------------------
+# batched verbs: crash mid-generation, restart, no lost/double reports
+# ---------------------------------------------------------------------------
+@pytest.mark.timeout(120)
+def test_batched_report_crash_restart_no_lost_or_double_reports(tmp_path):
+    """The server dies mid-``report_batch``: half the batch made the
+    journal, half did not. Replay must resume with the journaled half
+    counted exactly once, the lost half absent, and the interrupted
+    trials reclaimed — then the resumed search completes the budget."""
+    path = str(tmp_path / "journal.jsonl")
+    policy = RandomSearchPolicy(_space(), n_trials=2, n_phases=2, seed=5)
+    svc = OptimizationService(policy)
+    journal = Journal(path)
+    with MetaoptServer(svc, lease_ttl=30.0, journal=journal) as server:
+        with ServiceClient(server.host, server.port) as c:
+            trials = c.acquire_batch(node=0, slots=2)
+            assert len(trials) == 2
+            replies = c.report_batch(
+                [{"trial_id": t.trial_id, "phase": 0, "metric": 1.0 + i}
+                 for i, t in enumerate(trials)], node=0)
+            assert replies == ["continue", "continue"]
+    journal.close()
+
+    # the batch journals one report event per entry (same stream as two
+    # classic reports) — drop the LAST report line to simulate the server
+    # crashing after journaling entry 0 but before entry 1
+    lines = open(path).read().splitlines(keepends=True)
+    last_report = max(i for i, ln in enumerate(lines)
+                     if json.loads(ln).get("ev") == "report")
+    assert json.loads(lines[last_report])["trial_id"] == trials[1].trial_id
+    with open(path, "w") as f:
+        f.writelines(lines[:last_report] + lines[last_report + 1:])
+
+    svc2 = OptimizationService(
+        RandomSearchPolicy(_space(), n_trials=2, n_phases=2, seed=5))
+    journal2 = Journal(path)
+    replay_journal(path, svc2, journal=journal2)
+    t0, t1 = trials
+    # the journaled half: counted exactly once, not doubled
+    assert [m for m, _ in svc2.db.trials[t0.trial_id].reports] == [1.0]
+    # the lost half: no report, and the trial was reclaimed + requeued
+    assert svc2.db.trials[t1.trial_id].reports == []
+    assert svc2.db.trials[t1.trial_id].status is TrialStatus.CRASHED
+    assert svc2.db.trials[t0.trial_id].status is TrialStatus.CRASHED
+
+    # the resumed search completes both requeued configs via batched
+    # workers on the same journal
+    with MetaoptServer(svc2, lease_ttl=30.0, journal=journal2) as server2:
+        _run_agents(server2, 2, make_synthetic_objective())
+    journal2.close()
+    statuses = [t.status for t in svc2.db.trials.values()]
+    assert statuses.count(TrialStatus.COMPLETED) == 2
+    assert statuses.count(TrialStatus.CRASHED) == 2
+    for t in svc2.db.trials.values():
+        if t.status is TrialStatus.COMPLETED:   # full curves, no repeats
+            assert [p for p, (_, _) in enumerate(t.reports)] == [0, 1]
+    # a cold second replay reconstructs the identical final records
+    svc3 = OptimizationService(
+        RandomSearchPolicy(_space(), n_trials=2, n_phases=2, seed=5))
+    replay_journal(path, svc3)
+    assert {tid: (r.status, [m for m, _ in r.reports])
+            for tid, r in svc3.db.trials.items()} == \
+           {tid: (r.status, [m for m, _ in r.reports])
+            for tid, r in svc2.db.trials.items()}

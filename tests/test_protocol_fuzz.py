@@ -1,0 +1,207 @@
+"""Protocol fuzz: every ``_REGISTRY`` frame must survive the wire.
+
+Three properties, checked deterministically (seeded sampler, always runs)
+and property-based when hypothesis is installed:
+
+* **round-trip** — encode → FrameBuffer/decode reproduces the message
+  exactly, and re-encoding is byte-identical (sort_keys makes the wire
+  canonical);
+* **omitted-if-none** — every ``OMIT_IF_NONE`` field set to ``None``
+  vanishes from the payload, so a single-search / untraced client's
+  frames are byte-identical to the pre-extension wire;
+* **evolution rules** — unknown *fields* are dropped silently (old peer
+  vs newer message), unknown *types* are a hard ``ProtocolError``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import random
+import struct
+
+import pytest
+
+import repro.distributed.protocol as proto
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # container has no hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+# -- deterministic per-field sampler ----------------------------------------
+_INT_FIELDS = {"trial_id", "node", "phase", "slots", "rung", "clone_from",
+               "env_steps", "n_phases", "bracket_id"}
+_FLOAT_FIELDS = {"metric", "t_start", "t_end", "retry_after"}
+_BOOL_FIELDS = {"demote", "ok"}
+_STR_FIELDS = {"reason", "decision", "error", "search"}
+_DICT_FIELDS = {"hparams", "trace", "perturb", "summary", "stats"}
+_LIST_FIELDS = {"reports", "leases", "replies", "batch"}
+
+
+def _value(name: str, rng: random.Random):
+    """A JSON-stable value for a field (no tuples, no NaN — values must
+    survive json round-trip unchanged)."""
+    if name in _INT_FIELDS:
+        return rng.randrange(0, 10_000)
+    if name in _FLOAT_FIELDS:
+        return round(rng.uniform(-1e3, 1e3), 6)
+    if name in _BOOL_FIELDS:
+        return rng.random() < 0.5
+    if name in _STR_FIELDS:
+        return "".join(rng.choices("abc-xyz0189 é中", k=rng.randrange(0, 12)))
+    if name in _DICT_FIELDS:
+        return {"x": round(rng.uniform(0, 1), 6), "tag": "v", "n": rng.randrange(9)}
+    if name in _LIST_FIELDS:
+        return [{"trial_id": rng.randrange(100), "metric": 0.5, "phase": i}
+                for i in range(rng.randrange(0, 4))]
+    raise AssertionError(f"no sampler for field {name!r} — extend the fuzz "
+                         "tables when adding protocol fields")
+
+
+def _sample(cls, rng: random.Random, omit_nones: bool = False):
+    kwargs = {}
+    for f in dataclasses.fields(cls):
+        if omit_nones and f.name in getattr(cls, "OMIT_IF_NONE", ()):
+            kwargs[f.name] = None
+        else:
+            kwargs[f.name] = _value(f.name, rng)
+    return cls(**kwargs)
+
+
+@pytest.mark.parametrize("type_name", sorted(proto._REGISTRY))
+def test_round_trip_every_registry_type(type_name):
+    cls = proto._REGISTRY[type_name]
+    rng = random.Random(hash(type_name) & 0xFFFF)
+    for trial in range(25):
+        msg = _sample(cls, rng, omit_nones=(trial % 3 == 0))
+        frame = proto.encode(msg)
+        fb = proto.FrameBuffer()
+        got = fb.feed(frame)
+        assert got == [msg]
+        assert fb.pending() == 0
+        # canonical wire: re-encoding the decoded message is byte-identical
+        assert proto.encode(got[0]) == frame
+
+
+@pytest.mark.parametrize("type_name", sorted(
+    t for t, c in proto._REGISTRY.items() if getattr(c, "OMIT_IF_NONE", ())))
+def test_omitted_if_none_fields_leave_no_trace(type_name):
+    cls = proto._REGISTRY[type_name]
+    rng = random.Random(7)
+    msg = _sample(cls, rng, omit_nones=True)
+    payload = json.loads(proto.encode(msg)[4:].decode("utf-8"))
+    for name in cls.OMIT_IF_NONE:
+        assert name not in payload, (
+            f"{type_name}: None {name!r} must be omitted from the wire")
+    # and the round-trip restores the Nones
+    restored = proto.decode(proto.encode(msg)[4:])
+    for name in cls.OMIT_IF_NONE:
+        assert getattr(restored, name) is None
+
+
+def test_single_search_wire_is_byte_identical():
+    """The multi-tenant field changes nothing for a single-search client:
+    a frame with search=None is byte-for-byte the frame that predates the
+    field (hand-built here from the same payload minus ``search``)."""
+    msg = proto.ReportRequest(trial_id=3, phase=1, metric=2.5)
+    payload = {"type": "report", "trial_id": 3, "phase": 1, "metric": 2.5,
+               "t_start": 0.0, "t_end": 0.0, "node": None}
+    legacy = json.dumps(payload, sort_keys=True).encode("utf-8")
+    assert proto.encode(msg) == struct.pack(">I", len(legacy)) + legacy
+
+
+@pytest.mark.parametrize("type_name", sorted(proto._REGISTRY))
+def test_unknown_fields_are_dropped(type_name):
+    cls = proto._REGISTRY[type_name]
+    msg = _sample(cls, random.Random(3), omit_nones=True)
+    payload = json.loads(proto.encode(msg)[4:].decode("utf-8"))
+    payload["field_from_the_future"] = {"v": 2}
+    data = json.dumps(payload, sort_keys=True).encode("utf-8")
+    assert proto.decode(data) == msg
+
+
+def test_unknown_type_is_a_hard_error():
+    data = json.dumps({"type": "teleport", "x": 1}).encode("utf-8")
+    with pytest.raises(proto.ProtocolError):
+        proto.decode(data)
+    with pytest.raises(proto.ProtocolError):
+        proto.decode(json.dumps({"no": "type"}).encode("utf-8"))
+    with pytest.raises(proto.ProtocolError):
+        proto.decode(b"\xff not json")
+
+
+def test_framebuffer_chunked_feed():
+    """Any byte-chunking of a frame stream decodes to the same messages —
+    the property the selector server relies on for short recv()s."""
+    rng = random.Random(11)
+    msgs = [_sample(proto._REGISTRY[t], rng)
+            for t in sorted(proto._REGISTRY)] * 3
+    stream = b"".join(proto.encode(m) for m in msgs)
+    for chunker in (1, 3, 7, 4096):
+        fb = proto.FrameBuffer()
+        got = []
+        i = 0
+        while i < len(stream):
+            step = chunker if isinstance(chunker, int) else rng.randrange(1, 64)
+            got.extend(fb.feed(stream[i:i + step]))
+            i += step
+        assert got == msgs
+        assert fb.pending() == 0
+
+
+def test_framebuffer_rejects_oversize_frame():
+    fb = proto.FrameBuffer()
+    with pytest.raises(proto.ProtocolError):
+        fb.feed(struct.pack(">I", proto.MAX_MESSAGE_BYTES + 1))
+
+
+def test_framebuffer_pending_counts_partial_bytes():
+    frame = proto.encode(proto.HeartbeatRequest(trial_id=1))
+    fb = proto.FrameBuffer()
+    assert fb.feed(frame[:6]) == []
+    assert fb.pending() == 6
+    assert fb.feed(frame[6:]) == [proto.HeartbeatRequest(trial_id=1)]
+    assert fb.pending() == 0
+
+
+# -- property-based tier (skipped when hypothesis is absent) ----------------
+if HAVE_HYPOTHESIS:
+    _json_scalars = st.one_of(
+        st.none(), st.booleans(), st.integers(-2**31, 2**31),
+        st.floats(allow_nan=False, allow_infinity=False, width=32),
+        st.text(max_size=20))
+
+    @settings(max_examples=200, deadline=None)
+    @given(type_i=st.integers(0, len(proto._REGISTRY) - 1),
+           seed=st.integers(0, 2**32 - 1),
+           chunk=st.integers(1, 64))
+    def test_hypothesis_round_trip(type_i, seed, chunk):
+        cls = proto._REGISTRY[sorted(proto._REGISTRY)[type_i]]
+        msg = _sample(cls, random.Random(seed), omit_nones=seed % 2 == 0)
+        frame = proto.encode(msg)
+        fb = proto.FrameBuffer()
+        got = []
+        for i in range(0, len(frame), chunk):
+            got.extend(fb.feed(frame[i:i + chunk]))
+        assert got == [msg]
+        assert proto.encode(got[0]) == frame
+
+    @settings(max_examples=100, deadline=None)
+    @given(extra=st.dictionaries(
+        st.text(min_size=1, max_size=12).filter(
+            lambda k: k not in {f.name for c in proto._REGISTRY.values()
+                                for f in dataclasses.fields(c)}
+            and k != "type"),
+        _json_scalars, max_size=4))
+    def test_hypothesis_unknown_field_tolerance(extra):
+        msg = proto.HeartbeatRequest(trial_id=5)
+        payload = json.loads(proto.encode(msg)[4:].decode("utf-8"))
+        payload.update(extra)
+        data = json.dumps(payload, sort_keys=True).encode("utf-8")
+        assert proto.decode(data) == msg
+else:
+    def test_hypothesis_round_trip():
+        pytest.skip("hypothesis not installed in this environment")

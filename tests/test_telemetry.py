@@ -217,12 +217,15 @@ def test_stats_verb_round_trip_over_the_wire():
     assert stats["counters"].get("service.env_steps", 0) == 0
     rpc = {k: v for k, v in stats["histograms"].items()
            if k.startswith("server.rpc_s.")}
-    assert rpc["server.rpc_s.report"]["count"] >= 6
+    # agents report through the batched verb (one-entry batches); each
+    # frame carries one report, counted by server.batch_reports
+    assert rpc["server.rpc_s.report_batch"]["count"] >= 6
+    assert stats["counters"]["server.batch_reports"] >= 6
     assert rpc["server.rpc_s.acquire"]["count"] >= 6
     assert "server.rpc_s.stats" in rpc               # this very request
     verdicts = sum(v for k, v in stats["counters"].items()
                    if k.startswith("service.verdicts."))
-    assert verdicts >= rpc["server.rpc_s.report"]["count"]
+    assert verdicts >= rpc["server.rpc_s.report_batch"]["count"]
 
 
 def test_old_client_frames_still_decode_and_serve():
