@@ -47,12 +47,12 @@ def bench_population_pbt():
              for _ in range(N_CLONES)]
 
     # warm both paths once (device put/get layouts, dispatch)
-    bucket.clone_slot(1, bucket, 0, 1e-3, 0.99, 0.01)
+    bucket.clone_slot(1, bucket, 0, (1e-3, 0.99, 0.01))
     _block(bucket)
 
     t0 = time.perf_counter()
     for src, dst in pairs:
-        bucket.clone_slot(int(dst), bucket, int(src), 1e-3, 0.99, 0.01)
+        bucket.clone_slot(int(dst), bucket, int(src), (1e-3, 0.99, 0.01))
     _block(bucket)
     device_s = time.perf_counter() - t0
 

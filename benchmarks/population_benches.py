@@ -102,3 +102,65 @@ def bench_population_throughput():
                      f"t_max={T_MAX} n_envs={N_ENVS} "
                      f"updates/phase={MAX_UPDATES}"))
     return rows
+
+
+# ---------------------------------------------------------------------------
+# the LM workload (PopulationObjective protocol)
+# ---------------------------------------------------------------------------
+LM_ARCH = "yi-9b"
+LM_BATCH = 4
+LM_SEQ = 32
+LM_STEPS = 20
+
+
+def _lm_space() -> SearchSpace:
+    # loss_chunk pinned: one bucket, one compile for the whole population
+    return SearchSpace({
+        "learning_rate": LogUniform(1e-4, 1e-3),
+        "loss_chunk": Categorical((LM_SEQ,)),
+        "grad_clip": Categorical((1.0,)),
+        "warmup_steps": Categorical((1,)),
+    })
+
+
+def bench_population_lm():
+    """LM fine-tuning trials on the engine vs the thread backend at W0 in
+    {2, 8}: same reduced model, same batch/seq, ``LM_STEPS`` updates per
+    phase on both, so tokens/s follows from the report count alone. Warm
+    accounting matches bench_population_throughput: the vectorized
+    engine's one-per-bucket compile is paid by a throwaway search, the
+    thread backend recompiles per trial by construction."""
+    from repro.train.trainer import make_lm_objective
+    rows = []
+    for w0 in (2, 8):
+        # policies are stateful: each backend drains its own fresh copy
+        def policy():
+            return RandomSearchPolicy(_lm_space(), w0, N_PHASES, seed=0)
+        objective = make_lm_objective(LM_ARCH, steps_per_phase=LM_STEPS,
+                                      batch=LM_BATCH, seq=LM_SEQ, seed=0)
+        thread = ThreadCluster(4, objective).run(policy())
+
+        spec = {"kind": "lm", "arch": LM_ARCH, "batch": LM_BATCH,
+                "seq": LM_SEQ, "data_seed": 0}
+        warm = PopulationCluster(w0, objective=spec, episodes_per_phase=1,
+                                 seed=0).run(
+            RandomSearchPolicy(_lm_space(), w0, 1, seed=0))
+        vect = PopulationCluster(w0, objective=spec,
+                                 episodes_per_phase=LM_STEPS, seed=0
+                                 ).run(policy())
+
+        tok = LM_BATCH * LM_SEQ * LM_STEPS
+        tps = {"thread": len(thread.records) * tok / thread.wall_time,
+               "vectorized": len(vect.records) * tok / vect.wall_time}
+        walls = {"thread": thread.wall_time, "vectorized": vect.wall_time}
+        for name in ("thread", "vectorized"):
+            extra = (f" compile~{warm.wall_time:.1f}s"
+                     if name == "vectorized" else "")
+            rows.append((f"population_lm/w{w0}/{name}/tokens_per_s",
+                         float(tps[name]),
+                         f"wall={walls[name]:.1f}s{extra}"))
+        rows.append((f"population_lm/w{w0}/vectorized_over_thread",
+                     float(tps["vectorized"] / max(tps["thread"], 1e-9)),
+                     f"arch={LM_ARCH} batch={LM_BATCH} seq={LM_SEQ} "
+                     f"updates/phase={LM_STEPS}"))
+    return rows

@@ -45,6 +45,7 @@ def _suites(fast: bool):
             ("metaopt_rl_real", mb.bench_metaopt_rl_real),
             ("backend_overhead", mb.bench_backend_overhead),  # distributed
             ("population_throughput", pb.bench_population_throughput),
+            ("population_lm", pb.bench_population_lm),  # LM workload
             ("sharded_population", shb.bench_sharded_population),
             ("population_multihost", mhb.bench_population_multihost),
             ("population_pbt", pbt.bench_population_pbt),  # clone cost

@@ -310,9 +310,11 @@ class PopulationCluster:
     paper's "stopped worker's node immediately acquires a fresh
     configuration" happens at slot granularity with zero process churn.
 
-    RL objectives only (the engine vmaps the GA3C train step); ``slots``
-    defaults to the policy's initial worker count W0 so the entire
-    population is in flight from the first step.
+    ``objective`` selects the workload: None (default) is GA3C on
+    ``game``; otherwise a ``PopulationObjective`` instance or a spec dict
+    like ``{"kind": "lm", "arch": ...}`` (see ``population.objectives``).
+    ``slots`` defaults to the policy's initial worker count W0 so the
+    entire population is in flight from the first step.
 
     ``devices > 1`` shards every bucket's slot axis across that many
     accelerator devices via ``shard_map`` over a
@@ -326,9 +328,10 @@ class PopulationCluster:
     def __init__(self, slots: Optional[int] = None, *, game: str = "pong",
                  episodes_per_phase: int = 60, n_envs: int = 16,
                  max_updates: int = 2000, seed: int = 0, devices: int = 1,
-                 bracket_eta: Optional[int] = None):
+                 bracket_eta: Optional[int] = None, objective=None):
         self.slots = slots
         self.game = game
+        self.objective = objective
         self.episodes_per_phase = episodes_per_phase
         self.n_envs = n_envs
         self.max_updates = max_updates
@@ -356,7 +359,8 @@ class PopulationCluster:
             svc.configure_bracket(expect_entrants=(
                 min(slots, budget) if budget else slots))
         engine = PopulationEngine(
-            self.game, max_slots=slots, n_envs=self.n_envs,
+            self.objective if self.objective is not None else self.game,
+            max_slots=slots, n_envs=self.n_envs,
             episodes_per_phase=self.episodes_per_phase,
             max_updates=self.max_updates, seed=self.seed, mesh=mesh,
             bracket_eta=self.bracket_eta,

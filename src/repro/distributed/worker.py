@@ -243,8 +243,8 @@ def main(argv=None) -> int:
     ap.add_argument("--heartbeat-interval", type=float, default=2.0)
     ap.add_argument("--slots", type=int, default=1,
                     help="lease up to this many trials at once and train "
-                         "them in the on-device population engine (RL "
-                         "objectives only; 1 = classic scalar worker)")
+                         "them in the on-device population engine (rl and "
+                         "lm objectives; 1 = classic scalar worker)")
     ap.add_argument("--bracket", action="store_true",
                     help="join the server-side successive-halving bracket: "
                          "acquires carry the rung-0 hint and 'parked' "
@@ -268,17 +268,26 @@ def main(argv=None) -> int:
                           seed=args.seed)
 
     if args.slots > 1:
-        if spec.get("kind") != "rl":
-            print(f"--slots {args.slots} requires an RL spec, got "
+        if spec.get("kind") not in ("rl", "lm"):
+            print(f"--slots {args.slots} requires an rl or lm spec, got "
                   f"{spec.get('kind')!r}")
             return 2
         from repro.population.worker import main as population_main
+        if spec.get("kind") == "lm":
+            # the LM spec's steps_per_phase is the engine's generic
+            # units-per-phase knob (the lm objective counts updates)
+            workload = ["--objective", "lm",
+                        "--arch", spec.get("arch", "yi-9b"),
+                        "--episodes-per-phase",
+                        str(spec.get("steps_per_phase", 25))]
+        else:
+            workload = ["--game", spec.get("game", "pong"),
+                        "--episodes-per-phase",
+                        str(spec.get("episodes_per_phase", 20))]
         return population_main([
-            "--host", args.host, "--port", str(args.port),
-            "--game", spec.get("game", "pong"),
+            "--host", args.host, "--port", str(args.port)]
+            + workload + [
             "--slots", str(args.slots),
-            "--episodes-per-phase",
-            str(spec.get("episodes_per_phase", 20)),
             "--max-updates", str(spec.get("max_updates", 2000)),
             "--seed", str(spec.get("seed", 0)),
             "--heartbeat-interval", str(args.heartbeat_interval)]

@@ -9,6 +9,11 @@ first-class feature over ANY registered objective, on ANY backend.
   PYTHONPATH=src python -m repro.launch.tune --objective lm --arch yi-9b \\
       --workers 8 --nodes 2 --phases 4
 
+  # on-device population engine: every live trial trains at once inside
+  # one vmapped jitted step (works for --objective rl AND lm)
+  PYTHONPATH=src python -m repro.launch.tune --objective lm \\
+      --backend vectorized --workers 4 --phases 3
+
   # distributed: OS-process workers against a fault-tolerant TCP server
   # with a durable journal (resume with --resume after a server death)
   PYTHONPATH=src python -m repro.launch.tune --backend server \\
@@ -80,11 +85,11 @@ def main():
                          "plus a durable journal (resumable); vectorized: "
                          "the on-device population engine — all live trials "
                          "train simultaneously in vmapped jitted steps "
-                         "(RL objective only)")
+                         "(rl and lm objectives)")
     ap.add_argument("--slots", type=int, default=None,
                     help="vectorized: simultaneous on-device trials "
-                         "(default: --workers); process/server with an RL "
-                         "objective: trials leased per worker process "
+                         "(default: --workers); process/server with an rl "
+                         "or lm objective: trials leased per worker process "
                          "(default 1 = classic scalar workers)")
     ap.add_argument("--devices", type=int, default=1,
                     help="vectorized: shard the slot axis across this many "
@@ -140,8 +145,14 @@ def main():
             ap.error("--scheduler pbt is asynchronous (no rung barrier); "
                      "drop --bracket")
         from repro.core.scheduler import PBTScheduler
+        from repro.population.objectives import spec_for
+        # perturb rules come from the OBJECTIVE: its structural keys (rl:
+        # t_max, lm: loss_chunk) stay frozen under CLONE perturbation —
+        # a perturbed structural value would silently re-bucket (rl) or
+        # recompile (lm) the child
         policy = PBTScheduler(space, population=args.workers,
-                              n_phases=args.phases, seed=args.seed)
+                              n_phases=args.phases, seed=args.seed,
+                              frozen=spec_for(args.objective).structural)
     elif args.bracket:
         # rung demotion needs a pure sampler upstream: the W0
         # configurations come from the service, every eviction decision is
@@ -166,9 +177,9 @@ def main():
         ap.error("--eta must be >= 2 (demote bottom 1/eta per rung)")
 
     if args.backend == "vectorized":
-        if args.objective != "rl":
-            ap.error("--backend vectorized vmaps the GA3C train step; only "
-                     "--objective rl is supported")
+        if args.objective not in ("rl", "lm"):
+            ap.error("--backend vectorized runs the on-device population "
+                     "engine; use --objective rl or lm")
         if args.resume or args.journal:
             ap.error("--journal/--resume need a socket backend "
                      "(--backend process or server)")
@@ -177,9 +188,17 @@ def main():
             # touches jax); a no-op on hosts that already have the devices
             from repro.launch.mesh import force_host_device_count
             force_host_device_count(args.devices)
+        if args.objective == "lm":
+            pop_objective = {"kind": "lm", "arch": args.arch,
+                             "data_seed": args.seed}
+            units_per_phase = args.steps_per_phase
+        else:
+            pop_objective = None          # default: GA3C on --game
+            units_per_phase = args.episodes_per_phase
         cluster = PopulationCluster(
             args.slots or args.workers, game=args.game,
-            episodes_per_phase=args.episodes_per_phase,
+            objective=pop_objective,
+            episodes_per_phase=units_per_phase,
             n_envs=args.n_envs, seed=args.seed, devices=args.devices,
             bracket_eta=args.eta if args.bracket else None)
     elif args.backend == "thread":
@@ -206,9 +225,10 @@ def main():
         if args.resume and journal_path is None:
             ap.error("--resume requires a journal "
                      "(--backend server or --journal PATH)")
-        if args.slots and args.slots > 1 and args.objective != "rl":
+        if args.slots and args.slots > 1 and args.objective not in ("rl",
+                                                                    "lm"):
             ap.error("--slots > 1 (population workers) requires "
-                     "--objective rl")
+                     "--objective rl or lm")
         cluster = ProcessCluster(args.nodes, build_objective_spec(args),
                                  lease_ttl=args.lease_ttl,
                                  journal_path=journal_path,

@@ -36,29 +36,44 @@ def init_opt_state(tc: TrainConfig, params) -> OptState:
                                  params))
 
 
-def learning_rate(tc: TrainConfig, step, base=None) -> jax.Array:
+def learning_rate(tc: TrainConfig, step, base=None, warmup=None) -> jax.Array:
     """``base`` overrides ``tc.learning_rate`` — it may be a traced scalar,
     which is how the population engine vmaps one train step over per-trial
-    learning rates (the config value is a python float baked into the jit)."""
+    learning rates (the config value is a python float baked into the jit).
+    ``warmup`` likewise overrides ``tc.warmup_steps`` with a (possibly
+    traced) horizon; values <= 1 mean no warmup, matching the config
+    semantics without a data-dependent branch."""
     lr = jnp.asarray(tc.learning_rate if base is None else base, jnp.float32)
+    if warmup is not None:
+        w = jnp.maximum(jnp.asarray(warmup, jnp.float32), 1.0)
+        return lr * jnp.minimum(1.0, (step + 1) / w)
     if tc.warmup_steps:
         lr = lr * jnp.minimum(1.0, (step + 1) / tc.warmup_steps)
     return lr
 
 
-def _clip_by_global_norm(grads, max_norm: float):
+def _clip_by_global_norm(grads, max_norm):
     gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                       for g in jax.tree.leaves(grads)))
-    scale = (jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
-             if max_norm else jnp.float32(1.0))
+    # a concrete 0/None disables clipping at trace time (the historical
+    # contract); a traced max_norm always takes the clip branch — per-slot
+    # searches that want "no clip" pass a large norm instead
+    no_clip = max_norm is None or (isinstance(max_norm, (int, float))
+                                   and not max_norm)
+    scale = (jnp.float32(1.0) if no_clip
+             else jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9)))
     return jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads), gn
 
 
-def apply_updates(tc: TrainConfig, params, grads, state: OptState, lr=None):
-    """Returns (new_params, new_state, grad_norm). ``lr`` (optional traced
-    scalar) overrides the config learning rate — see ``learning_rate``."""
-    grads, gnorm = _clip_by_global_norm(grads, tc.grad_clip)
-    lr = learning_rate(tc, state.step, base=lr)
+def apply_updates(tc: TrainConfig, params, grads, state: OptState, lr=None,
+                  grad_clip=None, warmup_steps=None):
+    """Returns (new_params, new_state, grad_norm). ``lr``, ``grad_clip``,
+    and ``warmup_steps`` (optional traced scalars) override their config
+    twins — how the population engine vmaps one train step over per-trial
+    hyperparameters (config values are python floats baked into the jit)."""
+    grads, gnorm = _clip_by_global_norm(
+        grads, tc.grad_clip if grad_clip is None else grad_clip)
+    lr = learning_rate(tc, state.step, base=lr, warmup=warmup_steps)
     if tc.optimizer == "rmsprop":
         # non-centered RMSProp: g2 <- d*g2 + (1-d)*g^2 ; p -= lr*g/sqrt(g2+eps)
         d = tc.rmsprop_decay

@@ -1,6 +1,17 @@
 """On-device population engine: the whole HyperTrick search as vmapped,
-jitted GA3C train steps (see engine.py)."""
-from repro.population.engine import (LocalDriver, PopulationEngine,
-                                     TrialLease)
+jitted train steps, generic over a ``PopulationObjective`` (see engine.py
+and objectives/).
 
+The engine re-exports are lazy (PEP 562): ``population.objectives`` spec
+metadata must stay importable in numpy-only environments (launchers ask
+for perturb rules without jax), and an eager engine import would drag jax
+in with the package.
+"""
 __all__ = ["PopulationEngine", "LocalDriver", "TrialLease"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        from repro.population import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

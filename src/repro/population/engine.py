@@ -1,18 +1,27 @@
 """The on-device population engine: every live HyperTrick trial trains
-simultaneously inside vmapped, jitted GA3C train steps.
+simultaneously inside vmapped, jitted train steps.
 
-Instead of one ``GA3CTrainer`` (one jit, one Python worker) per
-configuration, per-trial params / optimizer state / env state are stacked
-along a leading *slot* axis and the existing ``a3c.rollout`` + loss +
-``optim.apply_updates`` update is vmapped over the per-trial continuous
-hyperparameters (``learning_rate``, ``gamma``, ``beta``). Trials are
-bucketed by the *structural* hyperparameter ``t_max`` (the scan length of
-the rollout), so each bucket is exactly one jitted step with donated
-buffers. Eviction is device-side masking — a stopped slot's state is frozen
-via ``jnp.where`` and the slot is immediately hot-swapped with the next
-configuration from the service — which is the paper's §3.2 "the stopped
-worker's node immediately acquires a fresh configuration", at slot
-granularity on one device.
+The engine is pure *mechanism*, generic over a ``PopulationObjective``
+(``population.objectives``): the objective supplies one trial's device
+state as a ``(learner, carry)`` pair, a jittable single-slot step over
+traced per-slot hyperparameters, and the traced-vs-structural hparam
+split. The engine supplies everything else: per-trial state stacked
+along a leading *slot* axis, the step vmapped over the traced
+hyperparameters (ONE compile serves every configuration), trials
+bucketed by the objective-declared structural key (each bucket is
+exactly one jitted step with donated buffers), device-side eviction
+masks, hot-swap admission, park/poll rung barriers, device-side PBT
+clones, and ``shard_map`` sharding. Eviction is device-side masking — a
+stopped slot's state is frozen via ``jnp.where`` and the slot is
+immediately hot-swapped with the next configuration from the service —
+which is the paper's §3.2 "the stopped worker's node immediately
+acquires a fresh configuration", at slot granularity on one device.
+
+Objectives shipped: GA3C (``objectives/ga3c.py``, the paper's workload
+and the default — bit-identical to the pre-refactor engine) and LM
+fine-tuning (``objectives/lm.py``: per-trial lr/clip/warmup over a tiny
+``configs.registry`` model). A plain game string still constructs the
+GA3C objective, so every pre-refactor call site works unchanged.
 
 The engine is driven through a small *driver* interface so the same loop
 serves two deployments:
@@ -48,20 +57,18 @@ Two orthogonal extensions ride on the slot axis:
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.optim.optimizers import apply_updates, init_opt_state
-from repro.rl.a3c import a3c_loss, init_loop_state, rollout
-from repro.rl.envs.minigames import make_env
-from repro.rl.ga3c import ga3c_train_config, trial_seed
-from repro.rl.network import A3CNetConfig, apply_net, init_net
+from repro.population.objectives import (PopulationObjective,
+                                         objective_from_spec)
+from repro.population.objectives.ga3c import UNROLL_T_MAX  # noqa: F401
+from repro.rl.ga3c import trial_seed
 from repro.telemetry.metrics import MetricsRegistry
 from repro.telemetry.spans import NULL_RECORDER
 
@@ -226,33 +233,74 @@ class SlotMeta:
 
 
 class Bucket:
-    """All slots sharing one structural ``t_max``: stacked pytrees with a
-    leading axis of ``capacity``, one compiled train step. Under a mesh the
-    capacity is always a multiple of the ``slots`` axis size and the slot
-    axis is sharded across it (padding slots are just inactive masks)."""
+    """All slots sharing one structural bucket key (GA3C: ``t_max``):
+    stacked pytrees with a leading axis of ``capacity``, one compiled
+    train step. Under a mesh the capacity is always a multiple of the
+    ``slots`` axis size and the slot axis is sharded across it (padding
+    slots are just inactive masks)."""
 
-    def __init__(self, engine: "PopulationEngine", t_max: int, capacity: int):
+    def __init__(self, engine: "PopulationEngine", key: Hashable,
+                 capacity: int, template_hparams: Dict[str, Any]):
         self.engine = engine
-        self.t_max = t_max
+        self.key = key
+        obj = engine.objective
+        self.traced_names = obj.hparam_spec().traced
+        # work units (env transitions / tokens) one update of one slot
+        # performs — the engine's throughput accounting
+        self.update_cost = int(obj.update_cost(key))
         capacity = engine._round_capacity(capacity)
         self.capacity = capacity
-        tmpl_p = init_net(engine.net_cfg, jax.random.PRNGKey(0))
-        tmpl = (tmpl_p, init_opt_state(engine.tc, tmpl_p),
-                init_loop_state(engine.env, engine.n_envs,
-                                jax.random.PRNGKey(0)))
+        # template state fixes the stacked shapes/dtypes only (zeros;
+        # real state is written per-slot at admission)
+        tmpl = obj.init_slot_state(jax.random.PRNGKey(0), template_hparams)
         zeros = lambda x: jnp.zeros((capacity,) + x.shape, x.dtype)
-        self.params, self.opt_state, self.loop = (
+        self.learner, self.carry = (
             engine._place(jax.tree.map(zeros, t)) for t in tmpl)
-        self.lr = np.zeros(capacity, np.float32)
-        self.gamma = np.zeros(capacity, np.float32)
-        self.beta = np.zeros(capacity, np.float32)
+        self.hyper = {n: np.zeros(capacity, np.float32)
+                      for n in self.traced_names}
         self.active = np.zeros(capacity, bool)
         self._hyper_dev = None          # device mirror, refreshed on change
         self.meta: List[Optional[SlotMeta]] = [None] * capacity
         self.slot_ids = [engine._new_slot_id() for _ in range(capacity)]
         self._stepped = False           # telemetry: first step = compile
-        self._step = _bucket_step(engine.game, t_max, capacity,
-                                  engine.n_envs, engine.mesh)
+        self._step = _bucket_step(obj, key, capacity, engine.mesh)
+
+    # -- GA3C-vocabulary views (the pre-refactor attribute surface) ---------
+    @property
+    def t_max(self):
+        return self.key
+
+    @property
+    def params(self):
+        return self.learner[0]
+
+    @params.setter
+    def params(self, v):
+        self.learner = (v,) + tuple(self.learner[1:])
+
+    @property
+    def opt_state(self):
+        return self.learner[1]
+
+    @opt_state.setter
+    def opt_state(self, v):
+        self.learner = (self.learner[0], v) + tuple(self.learner[2:])
+
+    @property
+    def loop(self):
+        return self.carry
+
+    @property
+    def lr(self):
+        return self.hyper["learning_rate"]
+
+    @property
+    def gamma(self):
+        return self.hyper["gamma"]
+
+    @property
+    def beta(self):
+        return self.hyper["beta"]
 
     # -- slot management ----------------------------------------------------
     def free_index(self) -> Optional[int]:
@@ -276,51 +324,50 @@ class Bucket:
         assert pad > 0
         padz = lambda x: jnp.concatenate(
             [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
-        self.params, self.opt_state, self.loop = (
+        self.learner, self.carry = (
             self.engine._place(jax.tree.map(padz, t))
-            for t in (self.params, self.opt_state, self.loop))
-        for name in ("lr", "gamma", "beta"):
-            setattr(self, name, np.concatenate(
-                [getattr(self, name), np.zeros(pad, np.float32)]))
+            for t in (self.learner, self.carry))
+        self.hyper = {n: np.concatenate([a, np.zeros(pad, np.float32)])
+                      for n, a in self.hyper.items()}
         self.active = np.concatenate([self.active, np.zeros(pad, bool)])
         self._hyper_dev = None
         self.meta += [None] * pad
         self.slot_ids += [self.engine._new_slot_id() for _ in range(pad)]
         self.capacity = new_capacity
         self._stepped = False           # new shape: next step compiles again
-        self._step = _bucket_step(self.engine.game, self.t_max, new_capacity,
-                                  self.engine.n_envs, self.engine.mesh)
+        self._step = _bucket_step(self.engine.objective, self.key,
+                                  new_capacity, self.engine.mesh)
 
-    def write_slot(self, i: int, meta: SlotMeta, params, opt_state, loop,
-                   lr: float, gamma: float, beta: float) -> None:
-        """Hot-swap a fresh configuration into slot ``i``."""
+    def write_slot(self, i: int, meta: SlotMeta, learner, carry,
+                   traced: Sequence[float]) -> None:
+        """Hot-swap a fresh configuration into slot ``i``. ``traced`` are
+        the per-slot hyperparameter scalars in ``hparam_spec().traced``
+        order (``PopulationObjective.traced_values``)."""
         place = self.engine._place
         setter = lambda a, v: a.at[i].set(v)
-        self.params = place(jax.tree.map(setter, self.params, params))
-        self.opt_state = place(jax.tree.map(setter, self.opt_state,
-                                            opt_state))
-        self.loop = place(jax.tree.map(setter, self.loop, loop))
-        self.lr[i], self.gamma[i], self.beta[i] = lr, gamma, beta
+        self.learner = place(jax.tree.map(setter, self.learner, learner))
+        self.carry = place(jax.tree.map(setter, self.carry, carry))
+        for n, v in zip(self.traced_names, traced):
+            self.hyper[n][i] = v
         self.active[i] = True
         self.meta[i] = meta
         self._hyper_dev = None
 
     def clone_slot(self, dst: int, src_bucket: "Bucket", src: int,
-                   lr: float, gamma: float, beta: float) -> None:
+                   traced: Sequence[float]) -> None:
         """PBT exploit: copy ``src_bucket``'s slot ``src`` learner state
-        (params + optimizer state — NOT the env/loop state: the clone
-        keeps exploring its own environments) into slot ``dst``, entirely
-        device-side (one jitted slot-copy executable, weights never
-        materialize on the host), and install the perturbed continuous
-        hyperparameters. Network and optimizer shapes are
-        t_max-independent, so the source may live in a different bucket of
-        the same engine."""
+        (params + optimizer state — NOT the carry: the clone keeps
+        exploring its own environments / data stream) into slot ``dst``,
+        entirely device-side (one jitted slot-copy executable, weights
+        never materialize on the host), and install the perturbed traced
+        hyperparameters. Learner shapes are independent of the structural
+        key, so the source may live in a different bucket of the same
+        engine."""
         place = self.engine._place
-        state = ((self.params, self.opt_state),
-                 (src_bucket.params, src_bucket.opt_state))
-        (self.params, self.opt_state) = place(
-            _clone_slot_step(state[0], state[1], src, dst))
-        self.lr[dst], self.gamma[dst], self.beta[dst] = lr, gamma, beta
+        self.learner = place(
+            _clone_slot_step(self.learner, src_bucket.learner, src, dst))
+        for n, v in zip(self.traced_names, traced):
+            self.hyper[n][dst] = v
         self._hyper_dev = None
 
     def release(self, i: int) -> None:
@@ -344,11 +391,12 @@ class Bucket:
     # -- the one jitted step ------------------------------------------------
     def step(self) -> None:
         if self._hyper_dev is None:
+            arrays = tuple(self.hyper[n] for n in self.traced_names)
             self._hyper_dev = tuple(
-                self.engine._place(jnp.asarray(a)) for a in
-                (self.lr, self.gamma, self.beta, self.active))
-        self.params, self.opt_state, self.loop = self._step(
-            self.params, self.opt_state, self.loop, *self._hyper_dev)
+                self.engine._place(jnp.asarray(a))
+                for a in arrays + (self.active,))
+        self.learner, self.carry = self._step(
+            self.learner, self.carry, *self._hyper_dev)
 
 
 @jax.jit
@@ -366,79 +414,76 @@ def _clone_slot_step(dst_state, src_state, src: int, dst: int):
         dst_state, src_state)
 
 
-# full-unroll ceiling: XLA:CPU won't parallelize inside while loops, so
-# unrolling ~2x-halves the step time of a multi-slot bucket — but compile
-# time grows with t_max * capacity, so large-t_max buckets keep the loop
-# (partial unrolls measure no faster than unroll=1 here; only full pays)
-UNROLL_T_MAX = 16
+# module-level compile cache: keyed by the OBJECTIVE's cache_key (not the
+# instance), so two engines over equivalent objectives share executables —
+# benches warm a search with a throwaway engine and keep the compiles
+_STEP_CACHE: Dict[tuple, Any] = {}
+_STEP_CACHE_MAX = 64
 
 
-@functools.lru_cache(maxsize=64)
-def _bucket_step(game: str, t_max: int, capacity: int, n_envs: int,
-                 mesh=None):
+def _bucket_step(objective: PopulationObjective, structural: Hashable,
+                 capacity: int, mesh=None):
     """One jitted, buffer-donating train step for a whole bucket, cached at
     module level: hyperparameters are traced inputs, so ONE compilation
     serves every configuration that ever occupies the bucket — per-trial
     backends cannot reuse compiles because each trial's hyperparameters are
-    burned into its jit as constants. (``n_envs`` is part of the key; it
-    fixes the stacked shapes.)
+    burned into its jit as constants.
 
-    The per-slot body is *exactly* the ``GA3CTrainer`` train step, with the
-    continuous hyperparameters as traced scalars instead of baked
-    constants. A local capacity of 1 skips vmap and keeps the trainer's
-    compact rollout scan, so a single-trial population is the same XLA
+    The per-slot body comes from ``objective.make_step``; the engine wraps
+    it in vmap over the slot axis, the eviction mask, donation, and (under
+    a mesh) ``shard_map``. A local capacity of 1 skips vmap and squeezes
+    the slot axis instead, so a single-trial population runs the
+    objective's own compact program — for GA3C that is the same XLA
     program as the thread backend (bit-for-bit parity).
 
     With a ``mesh`` (from ``make_population_mesh``) the step body runs
     under ``shard_map`` with the slot axis split over the mesh's ``slots``
     axis: each device owns ``capacity // n_shards`` slots and runs the
-    identical per-shard program — vmap, unroll choice, and the eviction
-    mask all act on the *local* slice, and since trials are independent no
-    collective appears anywhere. Numerics therefore depend only on the
-    local capacity: D devices at local capacity c bit-match one device at
-    capacity c."""
-    env = make_env(game)
-    tc = ga3c_train_config(3e-4)       # lr comes in traced, not from here
+    identical per-shard program — vmap, the objective's local-capacity
+    choice, and the eviction mask all act on the *local* slice, and since
+    trials are independent no collective appears anywhere. Numerics
+    therefore depend only on the local capacity: D devices at local
+    capacity c bit-match one device at capacity c."""
+    key = (objective.cache_key(), structural, capacity, mesh)
+    cached = _STEP_CACHE.get(key)
+    if cached is not None:
+        return cached
     n_shards = int(mesh.shape["slots"]) if mesh is not None else 1
     assert capacity % n_shards == 0, (capacity, n_shards)
     local_cap = capacity // n_shards
-    unroll = t_max if (local_cap > 1 and t_max <= UNROLL_T_MAX) else 1
-
-    def one(params, opt_state, loop, lr, gamma, beta):
-        traj, new_loop = rollout(env, params, loop, t_max, unroll=unroll)
-        _, v_boot = apply_net(params, new_loop.obs_stack)
-        v_boot = v_boot * (1.0 - traj.dones[-1])
-        grads, _ = jax.grad(
-            lambda p: a3c_loss(p, traj, v_boot, gamma=gamma, beta=beta),
-            has_aux=True)(params)
-        params, opt_state, _ = apply_updates(tc, params, grads, opt_state,
-                                             lr=lr)
-        return params, opt_state, new_loop
+    n_traced = len(objective.hparam_spec().traced)
+    one = objective.make_step(structural, local_cap)
 
     if local_cap == 1:
-        def batched(params, opt_state, loop, lr, gamma, beta):
+        def batched(learner, carry, *hyper):
             squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
-            out = one(squeeze(params), squeeze(opt_state), squeeze(loop),
-                      lr[0], gamma[0], beta[0])
+            out = one(squeeze(learner), squeeze(carry),
+                      *(h[0] for h in hyper))
             return tuple(jax.tree.map(lambda x: x[None], t) for t in out)
     else:
         batched = jax.vmap(one)
 
-    def step(params, opt_state, loop, lr, gamma, beta, active):
-        new = batched(params, opt_state, loop, lr, gamma, beta)
+    def step(learner, carry, *rest):
+        hyper, active = rest[:-1], rest[-1]
+        new = batched(learner, carry, *hyper)
         def keep_active(n, o):
             mask = active.reshape((active.shape[0],) + (1,) * (n.ndim - 1))
             return jnp.where(mask, n, o)
         return tuple(jax.tree.map(keep_active, n, o)
-                     for n, o in zip(new, (params, opt_state, loop)))
+                     for n, o in zip(new, (learner, carry)))
 
     if mesh is not None:
         from jax.sharding import PartitionSpec
         from repro.launch.mesh import compat_shard_map
         spec = PartitionSpec("slots")
-        step = compat_shard_map(step, mesh, (spec,) * 7, (spec,) * 3)
+        step = compat_shard_map(step, mesh, (spec,) * (n_traced + 3),
+                                (spec,) * 2)
 
-    return jax.jit(step, donate_argnums=(0, 1, 2))
+    fn = jax.jit(step, donate_argnums=(0, 1))
+    if len(_STEP_CACHE) >= _STEP_CACHE_MAX:
+        _STEP_CACHE.pop(next(iter(_STEP_CACHE)))
+    _STEP_CACHE[key] = fn
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -454,11 +499,20 @@ class PopulationEngine:
     the update in which ``episodes_per_phase`` episodes have finished, or at
     ``max_updates`` updates."""
 
-    def __init__(self, game: str, *, max_slots: int, n_envs: int = 16,
+    def __init__(self, objective, *, max_slots: int, n_envs: int = 16,
                  episodes_per_phase: int = 60, max_updates: int = 2000,
                  seed: int = 0, mesh=None, bracket_eta: Optional[int] = None,
                  metrics=None, spans=None):
-        self.game = game
+        # the workload: a PopulationObjective instance, a spec dict
+        # ({"kind": "lm", ...}), or — the pre-refactor surface — a plain
+        # game string, which constructs the default GA3C objective
+        if isinstance(objective, str):
+            from repro.population.objectives.ga3c import GA3CObjective
+            objective = GA3CObjective(objective, n_envs=n_envs)
+        elif isinstance(objective, dict):
+            objective = objective_from_spec(objective)
+        self.objective = objective
+        self.game = getattr(objective, "game", objective.name)
         # telemetry (engine.* metrics — see telemetry.METRIC_SCHEMA);
         # pass NULL_REGISTRY for a zero-overhead run (the bench baseline)
         self.metrics = metrics if metrics is not None else MetricsRegistry()
@@ -466,12 +520,6 @@ class PopulationEngine:
         # a SpanRecorder sinking to a journal, or the default no-op twin
         # (span emission sites are per-phase / per-compile, never per-step)
         self.spans = spans if spans is not None else NULL_RECORDER
-        self.env = make_env(game)
-        self.net_cfg = A3CNetConfig(grid=self.env.spec.grid,
-                                    n_actions=self.env.spec.n_actions)
-        # lr is overridden per-slot inside the step; the config value is
-        # only the (unused) default
-        self.tc = ga3c_train_config(3e-4)
         self.max_slots = max_slots
         self.n_envs = n_envs
         self.episodes_per_phase = episodes_per_phase
@@ -509,7 +557,7 @@ class PopulationEngine:
         # land elsewhere, in which case occupancy transiently exceeds
         # max_slots and the admission gate self-corrects).
         self.speculative_refill = True
-        self.buckets: Dict[int, Bucket] = {}
+        self.buckets: Dict[Hashable, Bucket] = {}
         self.total_env_steps = 0       # active-lane env transitions
         self.total_updates = 0
         self.clones = 0                # on-device PBT slot copies executed
@@ -559,39 +607,36 @@ class PopulationEngine:
     # -- admission ----------------------------------------------------------
     def admit(self, lease: TrialLease, now: float = 0.0) -> None:
         hp = lease.hparams
-        t_max = int(hp.get("t_max", 8))
-        bucket = self.buckets.get(t_max)
+        obj = self.objective
+        key = obj.bucket_key(hp)
+        bucket = self.buckets.get(key)
         if bucket is None:
-            bucket = self.buckets[t_max] = Bucket(self, t_max, 1)
+            bucket = self.buckets[key] = Bucket(self, key, 1, hp)
         i = bucket.free_index()
         if i is None:
             i = bucket.capacity
             bucket.grow(bucket.capacity + 1)
         rng = jax.random.PRNGKey(trial_seed(self.seed, hp))
-        k_net, k_env = jax.random.split(rng)
-        params = init_net(self.net_cfg, k_net)
-        opt_state = init_opt_state(self.tc, params)
-        loop = init_loop_state(self.env, self.n_envs, k_env)
+        learner, carry = obj.init_slot_state(rng, hp)
         meta = SlotMeta(lease.trial_id, hp, bucket.slot_ids[i],
                         phase_t0=now)
-        bucket.write_slot(i, meta, params, opt_state, loop,
-                          float(hp["learning_rate"]), float(hp["gamma"]),
-                          float(hp.get("beta", 0.01)))
+        bucket.write_slot(i, meta, learner, carry, obj.traced_values(hp))
 
     def _admit_grouped(self, leases: Sequence[TrialLease],
                        now: float) -> None:
-        """Group by t_max and pre-size buckets so an initial population of k
-        same-t_max trials compiles ONE step, not k."""
-        by_tmax: Dict[int, List[TrialLease]] = {}
+        """Group by bucket key and pre-size buckets so an initial
+        population of k same-bucket trials compiles ONE step, not k."""
+        by_key: Dict[Hashable, List[TrialLease]] = {}
         for lease in leases:
-            by_tmax.setdefault(int(lease.hparams.get("t_max", 8)),
-                               []).append(lease)
-        for t_max, group in by_tmax.items():
-            bucket = self.buckets.get(t_max)
+            by_key.setdefault(self.objective.bucket_key(lease.hparams),
+                              []).append(lease)
+        for key, group in by_key.items():
+            bucket = self.buckets.get(key)
             free = (bucket.capacity - bucket.n_occupied) if bucket else 0
             need = len(group) - free
             if bucket is None:
-                self.buckets[t_max] = Bucket(self, t_max, len(group))
+                self.buckets[key] = Bucket(self, key, len(group),
+                                           group[0].hparams)
             elif need > 0:
                 bucket.grow(bucket.capacity + need)
             for lease in group:
@@ -677,16 +722,15 @@ class PopulationEngine:
                         # bucket — critical_path splits it across them
                         self.spans.end(
                             "engine.compile", compile_s, cat="engine",
-                            t_max=bucket.t_max,
+                            bucket=bucket.key,
                             trials=[m.trial_id for m in bucket.meta
                                     if m is not None])
                     stepped = bucket.n_active
                     self.total_updates += stepped
-                    self.total_env_steps += (stepped * bucket.t_max
-                                             * self.n_envs)
+                    self.total_env_steps += stepped * bucket.update_cost
                     self.metrics.counter("engine.updates").inc(stepped)
                     self.metrics.counter("engine.env_steps").inc(
-                        stepped * bucket.t_max * self.n_envs)
+                        stepped * bucket.update_cost)
             self._poll_phases(driver, t0)
             self.metrics.histogram("engine.step_s").observe(
                 time.perf_counter() - iter_t0)
@@ -721,8 +765,9 @@ class PopulationEngine:
         for bucket in self.buckets.values():
             if not bucket.n_active:
                 continue
-            fin_n = np.asarray(bucket.loop.finished_n)
-            fin_sum = np.asarray(bucket.loop.finished_sum)
+            counts, sums = self.objective.progress(bucket.carry)
+            fin_n = np.asarray(counts)
+            fin_sum = np.asarray(sums)
             for i in range(bucket.capacity):
                 meta = bucket.meta[i]
                 if meta is None or not bucket.active[i]:
@@ -734,8 +779,7 @@ class PopulationEngine:
                     continue
                 score = (float(fin_sum[i]) - meta.start_sum) / max(n, 1.0)
                 t_now = time.monotonic() - t0
-                phase_steps = (meta.updates_in_phase * bucket.t_max
-                               * self.n_envs)
+                phase_steps = meta.updates_in_phase * bucket.update_cost
                 phase_s = t_now - meta.phase_t0
                 if phase_s > 0:
                     self.metrics.histogram(
@@ -793,20 +837,18 @@ class PopulationEngine:
         """Execute a CLONE verdict: the trial continues as a copy of
         ``reply.clone_from``'s learner state under ``reply.perturb``.
         When the parent occupies a slot of THIS engine the copy is a
-        device-side slot-to-slot transfer (params + opt state; weights
+        device-side slot-to-slot transfer (learner state only; weights
         never leave the device). A parent on another host — or one that
         finished and left its slot — cannot ship its weights, so the
         trial keeps its own learner state and only adopts the perturbed
         hyperparameters (documented degradation of remote clones)."""
         hp = dict(reply.perturb) if reply.perturb else dict(meta.hparams)
-        lr = float(hp.get("learning_rate", meta.hparams["learning_rate"]))
-        gamma = float(hp.get("gamma", meta.hparams["gamma"]))
-        beta = float(hp.get("beta", 0.01))
+        traced = self.objective.traced_values(hp, fallback=meta.hparams)
         src = self._find_slot(reply.clone_from)
         if src is not None and src != (bucket, i):
             src_bucket, j = src
             clone_t0 = time.perf_counter()
-            bucket.clone_slot(i, src_bucket, j, lr, gamma, beta)
+            bucket.clone_slot(i, src_bucket, j, traced)
             self.clones += 1
             self.metrics.counter("engine.clones").inc()
             self.spans.end("engine.clone",
@@ -814,7 +856,8 @@ class PopulationEngine:
                            trial_id=meta.trial_id,
                            clone_from=reply.clone_from)
         else:
-            bucket.lr[i], bucket.gamma[i], bucket.beta[i] = lr, gamma, beta
+            for n, v in zip(bucket.traced_names, traced):
+                bucket.hyper[n][i] = v
             bucket._hyper_dev = None
         meta.hparams = hp
 
@@ -874,8 +917,8 @@ class PopulationEngine:
                 continue
             key = id(bucket)
             if key not in counters:
-                counters[key] = (np.asarray(bucket.loop.finished_n),
-                                 np.asarray(bucket.loop.finished_sum))
+                counts, sums = self.objective.progress(bucket.carry)
+                counters[key] = (np.asarray(counts), np.asarray(sums))
             fin_n, fin_sum = counters[key]
             meta.phase += 1
             meta.updates_in_phase = 0

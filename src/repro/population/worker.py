@@ -74,10 +74,21 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--objective", default="ga3c", choices=("ga3c", "lm"),
+                    help="engine workload (population.objectives): ga3c "
+                         "trains --game, lm fine-tunes the reduced --arch "
+                         "model with per-trial lr/clip/warmup on the slot "
+                         "axis")
     ap.add_argument("--game", default="pong")
+    ap.add_argument("--arch", default="yi-9b",
+                    help="configs.registry architecture for --objective lm")
+    ap.add_argument("--lm-batch", type=int, default=2)
+    ap.add_argument("--lm-seq", type=int, default=32)
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--n-envs", type=int, default=16)
-    ap.add_argument("--episodes-per-phase", type=int, default=20)
+    ap.add_argument("--episodes-per-phase", type=int, default=20,
+                    help="phase length in the objective's progress units "
+                         "(GA3C: finished episodes; lm: updates)")
     ap.add_argument("--max-updates", type=int, default=2000)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--node", type=int, default=None)
@@ -108,7 +119,13 @@ def main(argv=None) -> int:
         force_host_device_count(args.devices)
         mesh = make_population_mesh(args.devices, 1)
 
-    engine = PopulationEngine(args.game, max_slots=args.slots,
+    if args.objective == "lm":
+        from repro.population.objectives.lm import LMObjective
+        workload = LMObjective(arch=args.arch, batch=args.lm_batch,
+                               seq=args.lm_seq, data_seed=args.seed)
+    else:
+        workload = args.game
+    engine = PopulationEngine(workload, max_slots=args.slots,
                               n_envs=args.n_envs,
                               episodes_per_phase=args.episodes_per_phase,
                               max_updates=args.max_updates, seed=args.seed,

@@ -194,3 +194,96 @@ def test_population_worker_drains_search_over_tcp():
     assert n_reports == 6                  # 3 trials x 2 phases
     statuses = {t.status.value for t in svc.db.trials.values()}
     assert statuses == {"completed"}
+
+
+# ---------------------------------------------------------------------------
+# the PopulationObjective protocol: registry parity + the LM workload
+# ---------------------------------------------------------------------------
+def test_objective_registry_matches_string_construction():
+    """An engine built from ``get_objective("ga3c", ...)`` reproduces the
+    legacy string-construction path bit-for-bit on identical leases."""
+    from repro.population.objectives import get_objective
+
+    def metrics_for(objective):
+        policy = RandomSearchPolicy(SearchSpace({}), 1, 2,
+                                    configs=[dict(HP)])
+        svc = OptimizationService(policy)
+        engine = PopulationEngine(objective, max_slots=1, n_envs=4,
+                                  episodes_per_phase=4, max_updates=40,
+                                  seed=0)
+        records = engine.run(LocalDriver(svc))
+        return [r[5] for r in sorted(records, key=lambda r: r[2])]
+
+    ref = metrics_for("pong")
+    got = metrics_for(get_objective("ga3c", game="pong", n_envs=4))
+    assert got == ref                      # bit-for-bit, not approx
+
+
+def test_lm_loss_chunk_buckets_by_effective_chunk():
+    """Chunk sizes the sequence truncates to the same scan structure share
+    one bucket (one compile); genuinely different chunks do not."""
+    from repro.population.objectives.lm import LMObjective
+    obj = LMObjective(seq=64)
+    assert obj.bucket_key({"loss_chunk": 32}) == 32
+    assert obj.bucket_key({"loss_chunk": 64}) == 64
+    assert obj.bucket_key({"loss_chunk": 1024}) == 64   # truncates to seq
+
+
+def test_lm_objective_per_trial_hparams_on_slot_axis():
+    """Two LM trials share one bucket with their lr/clip/warmup stacked on
+    the slot axis, and one vmapped step trains both."""
+    from repro.population.objectives import LM_SPEC
+    from repro.population.objectives.lm import LMObjective
+    hp0 = {"learning_rate": 1e-3, "loss_chunk": 32,
+           "grad_clip": 1.0, "warmup_steps": 1}
+    hp1 = {"learning_rate": 3e-4, "loss_chunk": 1024,
+           "grad_clip": 0.5, "warmup_steps": 4}
+    engine = PopulationEngine(LMObjective(batch=2, seq=16), max_slots=2,
+                              episodes_per_phase=10 ** 9,
+                              max_updates=10 ** 9, seed=0)
+    engine.admit(TrialLease(0, hp0))
+    engine.admit(TrialLease(1, hp1))
+    assert sorted(engine.buckets) == [16]  # both chunks truncate to seq
+    bucket = engine.buckets[16]
+    assert bucket.traced_names == LM_SPEC.traced
+    np.testing.assert_allclose(bucket.hyper["learning_rate"], [1e-3, 3e-4])
+    np.testing.assert_allclose(bucket.hyper["grad_clip"], [1.0, 0.5])
+    np.testing.assert_allclose(bucket.hyper["warmup_steps"], [1.0, 4.0])
+
+    before = jax.tree.map(np.asarray, bucket.params)
+    bucket.step()
+    after = jax.tree.map(np.asarray, bucket.params)
+    for slot in (0, 1):                    # both slots actually trained
+        deltas = [np.abs(a[slot] - b[slot]).max() for a, b in
+                  zip(jax.tree.leaves(after), jax.tree.leaves(before))]
+        assert max(deltas) > 0
+    n, loss_sum = engine.objective.progress(bucket.carry)
+    np.testing.assert_allclose(np.asarray(n), [1.0, 1.0])
+    assert np.isfinite(np.asarray(loss_sum)).all()
+
+
+def test_lm_population_worker_drains_search_over_tcp():
+    """The LM workload end-to-end over the wire: a multi-slot worker agent
+    leases LM trials from a real server and completes every one."""
+    from repro.distributed.client import ServiceClient
+    from repro.distributed.server import MetaoptServer
+    from repro.population.objectives import get_objective
+    from repro.population.worker import PopulationWorkerAgent
+    space = SearchSpace({"learning_rate": LogUniform(1e-4, 1e-3),
+                         "loss_chunk": Categorical((32,)),
+                         "grad_clip": Categorical((1.0,)),
+                         "warmup_steps": Categorical((1,))})
+    policy = RandomSearchPolicy(space, 3, 2, seed=0)
+    svc = OptimizationService(policy)
+    server = MetaoptServer(svc, lease_ttl=10.0)
+    with server:
+        engine = PopulationEngine(get_objective("lm", batch=2, seq=16),
+                                  max_slots=3, episodes_per_phase=2,
+                                  max_updates=10, seed=0)
+        with ServiceClient(server.host, server.port) as client:
+            agent = PopulationWorkerAgent(client, engine,
+                                          heartbeat_interval=0.5)
+            n_reports = agent.run()
+    assert n_reports == 6                  # 3 trials x 2 phases
+    statuses = {t.status.value for t in svc.db.trials.values()}
+    assert statuses == {"completed"}

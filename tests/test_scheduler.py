@@ -225,6 +225,57 @@ def test_pbt_frozen_hparams_keep_child_structure():
     assert clones >= 1
 
 
+def test_pbt_frozen_from_objective_spec_ga3c():
+    """Wiring ``frozen=spec_for("rl").structural`` freezes exactly the
+    objective-declared structural keys: a CLONE verdict's perturb keeps the
+    child's ``t_max`` while the traced keys move."""
+    from repro.population.objectives import spec_for
+    assert spec_for("rl").structural == ("t_max",)
+    space = SearchSpace({"learning_rate": LogUniform(1e-4, 1e-3),
+                         "gamma": Categorical((0.99, 0.995)),
+                         "t_max": Categorical((4, 8))})
+    pbt = PBTScheduler(space, population=8, n_phases=2, seed=0,
+                       exploit_frac=0.9, min_reports=2,
+                       frozen=spec_for("rl").structural)
+    svc = OptimizationService(pbt)
+    recs = [svc.acquire_trial() for _ in range(8)]
+    clones = 0
+    for i, r in enumerate(recs):
+        orig = dict(r.hparams)          # the record mutates on CLONE
+        v = svc.report_verdict(r.trial_id, 0, float(i % 3))
+        if v.kind is VerdictKind.CLONE:
+            clones += 1
+            assert set(v.perturb) == set(orig)
+            # structural: the child keeps its compiled bucket
+            assert v.perturb["t_max"] == orig["t_max"]
+            # traced: genuinely explored (parent's lr, perturbed)
+            assert v.perturb["learning_rate"] != orig["learning_rate"]
+    assert clones >= 1
+
+
+def test_pbt_frozen_from_objective_spec_lm():
+    """The same rule for the LM workload: ``loss_chunk`` (its declared
+    structural key) survives CLONE perturbation unchanged."""
+    from repro.population.objectives import spec_for
+    assert spec_for("lm").structural == ("loss_chunk",)
+    space = SearchSpace({"learning_rate": LogUniform(1e-4, 1e-3),
+                         "loss_chunk": Categorical((256, 1024))})
+    pbt = PBTScheduler(space, population=8, n_phases=2, seed=0,
+                       exploit_frac=0.9, min_reports=2,
+                       frozen=spec_for("lm").structural)
+    svc = OptimizationService(pbt)
+    recs = [svc.acquire_trial() for _ in range(8)]
+    clones = 0
+    for i, r in enumerate(recs):
+        orig = dict(r.hparams)
+        v = svc.report_verdict(r.trial_id, 0, float(i % 3))
+        if v.kind is VerdictKind.CLONE:
+            clones += 1
+            assert v.perturb["loss_chunk"] == orig["loss_chunk"]
+            assert v.perturb["learning_rate"] != orig["learning_rate"]
+    assert clones >= 1
+
+
 def test_perturb_hparams_respects_frozen_and_bounds():
     space = SearchSpace({"lr": LogUniform(1e-5, 1e-1),
                          "g": Categorical((0.9, 0.99, 0.999))})
